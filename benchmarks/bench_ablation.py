@@ -1,0 +1,49 @@
+"""Paper Fig. 10: reservation-based vs reactive data plane (max load factor)."""
+
+from __future__ import annotations
+
+from repro.core.enumerate import plan_cluster
+from repro.core.runtime import build_runtime
+from repro.core.simulator import run_simulation
+from repro.data.requests import poisson_trace
+
+from .common import HC_LARGE, make_setup, max_load_factor
+
+HORIZON_S = 8.0
+
+
+def main(quick=False):
+    cluster = HC_LARGE["HC3-L"]
+    arch = "internlm2-20b"  # transfer-heavy model: big feature maps
+    profiles, tables = make_setup([arch], cluster, slo_scale=4.0)
+    res = plan_cluster(profiles, tables, cluster)
+    plan = res.plan
+    thr = max(plan.throughput, 1e-9)
+    out = []
+    xfer_stats = {}
+    for mode, reactive in (("reservation", False), ("reactive", True)):
+        def attain(lf: float) -> float:
+            trace = poisson_trace(thr * lf, HORIZON_S, profiles[arch].slo_s,
+                                  arch, seed=0)
+            sim = run_simulation(build_runtime(plan, profiles), trace,
+                                 reactive=reactive)
+            xfer_stats[mode] = sim.xfer_actual
+            return sim.attainment
+
+        step = 0.2 if quick else 0.05
+        mlf = max_load_factor(attain, step=step)
+        out.append(f"ablation_resv[{mode}],0,max_load_factor={mlf:.2f}")
+    import numpy as np
+
+    for mode, xs in xfer_stats.items():
+        if xs:
+            out.append(
+                f"ablation_xfer[{mode}],0,"
+                f"mean_ms={np.mean(xs)*1e3:.2f};p99_ms={np.percentile(xs,99)*1e3:.2f}"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,86 @@
+"""Paper Fig. 6/7/9: max load factor @99% attainment, PPipe vs NP vs DART-r,
+Poisson + bursty arrivals, large (100-dev) and small (16-dev) clusters."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.baselines import plan_dart_r, plan_np
+from repro.core.enumerate import plan_cluster
+from repro.core.runtime import build_runtime
+from repro.core.simulator import run_simulation
+from repro.data.requests import multi_model_trace
+
+from .common import GROUPS, HC_LARGE, HC_SMALL, make_setup, max_load_factor
+
+HORIZON_S = 8.0
+
+
+def _attainment(plan, profiles, rate_by_model, bursty: bool, seed=0) -> float:
+    trace = multi_model_trace(
+        rate_by_model, HORIZON_S, {m: profiles[m].slo_s for m in profiles},
+        bursty=bursty, seed=seed,
+    )
+    if not trace:
+        return 1.0
+    sim = run_simulation(build_runtime(plan, profiles), trace)
+    return sim.attainment
+
+
+def run(group="G1", cluster_name="HC1-L", bursty=False, quick=False):
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS[group]
+    profiles, tables = make_setup(archs, cluster)
+    weights = {a: 1.0 for a in archs}
+
+    planners = {
+        "PPipe": lambda: plan_cluster(profiles, tables, cluster, weights=weights),
+        "NP": lambda: plan_np(profiles, tables, cluster, weights=weights),
+        "DART-r": lambda: plan_dart_r(profiles, tables, cluster, weights=weights),
+    }
+    # load factor 1.0 == PPipe's planned throughput per model (paper 7.1)
+    pp = planners["PPipe"]()
+    ref_thr = {a: max(pp.plan.throughput_of(a), 1e-9) for a in archs}
+
+    rows = []
+    for name, make in planners.items():
+        res = make()
+        plan = res.plan
+
+        def attain(lf: float) -> float:
+            rates = {a: ref_thr[a] * lf for a in archs}
+            return _attainment(plan, profiles, rates, bursty)
+
+        t0 = time.perf_counter()
+        step = 0.2 if quick else 0.05
+        mlf = max_load_factor(attain, step=step)
+        rows.append((name, mlf, plan.throughput, time.perf_counter() - t0))
+    return rows
+
+
+def main(quick=False):
+    out = []
+    combos = [("G1", "HC1-L", False), ("G1", "HC1-L", True)]
+    if not quick:
+        combos += [("G2", "HC2-L", False), ("G1", "HC1-S", False)]
+    for group, hc, bursty in combos:
+        rows = run(group, hc, bursty, quick=quick)
+        kind = "bursty" if bursty else "poisson"
+        by = {n: m for n, m, *_ in rows}
+        for name, mlf, thr, wall in rows:
+            out.append(
+                f"e2e_load[{hc}|{group}|{kind}|{name}],{wall*1e6/1:.0f},"
+                f"max_load_factor={mlf:.2f};planned_thr={thr:.0f}rps"
+            )
+        if by.get("NP"):
+            out.append(
+                f"e2e_gain[{hc}|{group}|{kind}],0,"
+                f"ppipe_vs_np={100*(by['PPipe']-by['NP'])/max(by['NP'],1e-9):.1f}%;"
+                f"ppipe_vs_dart={100*(by['PPipe']-by['DART-r'])/max(by['DART-r'],1e-9):.1f}%"
+            )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,73 @@
+"""Paper Fig. 14 + section 5.2: control-plane scalability.
+
+(a) runtime vs device count (should be ~constant: templates don't grow);
+(b) runtime vs number of accelerator classes;
+(c) runtime vs pre-partition block count (the C1 complexity knob);
+(d) literal Appendix-A.2 MILP runtime at small block counts, for contrast.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import costmodel as cm
+from repro.core.enumerate import plan_cluster
+from repro.core.milp import solve_milp
+from repro.core.types import ClusterSpec
+
+from .common import make_setup, profile_for
+
+ARCH = "stablelm-3b"
+
+
+def _time_plan(cluster, n_blocks=10, max_partitions=3):
+    profiles = {ARCH: profile_for(ARCH, cluster, n_blocks=n_blocks)}
+    tables = {
+        ARCH: cm.build_latency_table(profiles[ARCH], cluster,
+                                     vfracs=(1, 2, 4), batch_sizes=(1, 2, 4, 8))
+    }
+    t0 = time.perf_counter()
+    res = plan_cluster(profiles, tables, cluster, max_partitions=max_partitions)
+    wall = time.perf_counter() - t0
+    return wall, res
+
+
+def main(quick=False):
+    out = []
+    # (a) device count scaling: 100 -> 100k chips (paper Fig. 14a)
+    for n in ([100, 10_000] if quick else [100, 1_000, 10_000, 100_000]):
+        c = ClusterSpec(counts={"tpu-hi": n // 4, "tpu-lo": 3 * n // 4})
+        wall, res = _time_plan(c)
+        out.append(
+            f"milp_devices[{n}],{wall*1e6:.0f},"
+            f"templates={res.n_templates};thr={res.plan.throughput:.0f}rps"
+        )
+
+    # (b) class count scaling (paper Fig. 14b)
+    classes = ["tpu-hi", "tpu-mid", "tpu-lo", "tpu-edge"]
+    for k in (2, 3, 4):
+        c = ClusterSpec(counts={name: 25 for name in classes[:k]})
+        wall, res = _time_plan(c)
+        out.append(f"milp_classes[{k}],{wall*1e6:.0f},templates={res.n_templates}")
+
+    # (c) block count (pre-partitioning, section 5.2: N=5..20)
+    c = ClusterSpec(counts={"tpu-hi": 25, "tpu-lo": 75})
+    for nb in ([5, 10] if quick else [5, 10, 15, 20]):
+        wall, res = _time_plan(c, n_blocks=nb)
+        out.append(f"milp_blocks[{nb}],{wall*1e6:.0f},thr={res.plan.throughput:.0f}rps")
+
+    # (d) literal MILP for contrast (small instance)
+    prof = profile_for(ARCH, c, n_blocks=4)
+    tbl = cm.build_latency_table(prof, c, vfracs=(1, 2), batch_sizes=(1, 2))
+    t0 = time.perf_counter()
+    plan = solve_milp(prof, tbl, c, max_partitions=2, time_limit_s=30)
+    out.append(
+        f"milp_literal[4blocks],{(time.perf_counter()-t0)*1e6:.0f},"
+        f"thr={plan.throughput:.0f}rps"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

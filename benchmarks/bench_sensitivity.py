@@ -1,0 +1,48 @@
+"""Paper Fig. 13: sensitivity to SLO scale, class ratio, and SLO margin."""
+
+from __future__ import annotations
+
+from repro.core.baselines import plan_np
+from repro.core.enumerate import plan_cluster
+from repro.core.types import ClusterSpec
+
+from .common import make_setup
+
+ARCH = "stablelm-3b"
+
+
+def _thr(cluster, slo_scale=5.0, slo_margin=0.4):
+    profiles, tables = make_setup([ARCH], cluster, slo_scale=slo_scale)
+    pp = plan_cluster(profiles, tables, cluster, slo_margin=slo_margin)
+    np_ = plan_np(profiles, tables, cluster, slo_margin=slo_margin)
+    return pp.plan.throughput, np_.plan.throughput
+
+
+def main(quick=False):
+    out = []
+    base = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
+
+    # (a) SLO scales 2x..10x: PPipe's edge vanishes at both extremes
+    for s in ([2, 5, 10] if quick else [2, 3, 5, 8, 10]):
+        pp, np_ = _thr(base, slo_scale=float(s))
+        gain = 100 * (pp - np_) / max(np_, 1e-9)
+        out.append(f"sens_slo[x{s}],0,ppipe={pp:.0f}rps;np={np_:.0f}rps;gain={gain:.1f}%")
+
+    # (b) class ratios (paper: gains shrink as high-class share grows)
+    for hi, lo in ([(2, 14), (8, 8), (12, 4)] if quick else
+                   [(2, 14), (4, 12), (8, 8), (12, 4)]):
+        c = ClusterSpec(counts={"tpu-hi": hi, "tpu-lo": lo})
+        pp, np_ = _thr(c)
+        gain = 100 * (pp - np_) / max(np_, 1e-9)
+        out.append(f"sens_ratio[{hi}:{lo}],0,ppipe={pp:.0f}rps;np={np_:.0f}rps;gain={gain:.1f}%")
+
+    # (c) SLO margin sweep
+    for m in [0.2, 0.4, 0.6]:
+        pp, np_ = _thr(base, slo_margin=m)
+        out.append(f"sens_margin[{int(m*100)}%],0,ppipe={pp:.0f}rps;np={np_:.0f}rps")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,78 @@
+"""Shared benchmark fixtures: the HC cluster setups of paper Table 1 mapped to
+TPU classes, and the DNN-stand-in profiles (assigned LM archs at serving
+sequence lengths in place of the paper's 18 CNNs)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import blocks, costmodel as cm
+from repro.core.enumerate import plan_cluster
+from repro.core.types import ClusterSpec, ModelProfile
+from repro.models.model_zoo import layer_costs
+
+# Paper Table 1, large (100-dev simulator) and small (16-dev testbed) setups.
+HC_LARGE = {
+    "HC1-L": ClusterSpec(counts={"tpu-hi": 25, "tpu-lo": 75}),
+    "HC2-L": ClusterSpec(counts={"tpu-hi": 25, "tpu-mid": 75}),
+    "HC3-L": ClusterSpec(counts={"tpu-mid": 25, "tpu-lo": 75}),
+    "HC4-L": ClusterSpec(counts={"tpu-hi": 25, "tpu-edge": 75}),
+}
+HC_SMALL = {
+    "HC1-S": ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12}),
+    "HC2-S": ClusterSpec(counts={"tpu-hi": 4, "tpu-mid": 12}),
+    "HC3-S": ClusterSpec(counts={"tpu-mid": 4, "tpu-lo": 12}),
+    "HC4-S": ClusterSpec(counts={"tpu-hi": 4, "tpu-edge": 12}),
+}
+
+# Serving profile: one request = a seq_len-256 chunk of the model (vision-scale
+# latency); SLO = 5x inference latency on the fastest class at batch 1
+# (paper section 7.1, following AlpaServe).
+SERVE_SEQ = 256
+
+
+def profile_for(arch: str, cluster: ClusterSpec, slo_scale: float = 5.0,
+                n_blocks: int = 10) -> ModelProfile:
+    cfg = get_config(arch)
+    costs = layer_costs(cfg, SERVE_SEQ)
+    fastest = max(
+        (cluster.accel(c) for c in cluster.classes), key=lambda a: a.peak_flops
+    )
+    prof0 = blocks.build_profile(arch, costs, slo_s=1.0, n_blocks=n_blocks,
+                                 accel=fastest)
+    base_lat = sum(
+        cm.block_latency(b, fastest, 1, 1) for b in prof0.blocks
+    )
+    from repro.core.types import replace
+
+    return replace(prof0, slo_s=base_lat * slo_scale)
+
+
+def make_setup(arch_group: list[str], cluster: ClusterSpec, slo_scale=5.0,
+               slo_margin=0.4, batch_sizes=(1, 2, 4, 8), vfracs=(1, 2, 4)):
+    profiles = {a: profile_for(a, cluster, slo_scale) for a in arch_group}
+    tables = {
+        a: cm.build_latency_table(p, cluster, vfracs=vfracs, batch_sizes=batch_sizes)
+        for a, p in profiles.items()
+    }
+    return profiles, tables
+
+
+# Paper 7.2: 18 DNNs in 6 groups of 3; we form groups from the 10 archs.
+GROUPS = {
+    "G1": ["qwen2-1.5b", "xlstm-1.3b", "seamless-m4t-large-v2"],
+    "G2": ["stablelm-3b", "zamba2-2.7b", "qwen3-14b"],
+    "G3": ["internlm2-20b", "qwen2-1.5b", "zamba2-2.7b"],
+}
+
+
+def max_load_factor(attain_fn, lo=0.05, hi=1.0, step=0.05, target=0.99):
+    """Paper metric: max load factor sustaining >= 99% SLO attainment."""
+    best = 0.0
+    for lf in np.arange(lo, hi + 1e-9, step):
+        if attain_fn(float(lf)) >= target:
+            best = float(lf)
+        else:
+            break
+    return best

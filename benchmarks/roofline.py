@@ -1,0 +1,57 @@
+"""Roofline report generator: reads results/dryrun_*.jsonl (written by
+launch/dryrun.py) and emits the per-(arch x shape) three-term table used by
+EXPERIMENTS.md section Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return recs
+
+
+def table(single="dryrun_single_pod.jsonl"):
+    recs = load(os.path.join(RESULTS, single))
+    rows = []
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] == "skip":
+            rows.append((arch, shape, "SKIP", r.get("reason", "")))
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            rows.append((arch, shape, r["status"].upper(), r.get("error", "")[:60]))
+            continue
+        t = r["roofline"]
+        rows.append((
+            arch, shape,
+            f"c={t['compute_s']:.3f}s m={t['memory_s']:.3f}s "
+            f"x={t['collective_s']:.3f}s",
+            f"dom={t['dominant']};useful={r['useful_flops_ratio']:.2f};"
+            f"hbm={r['hbm_per_device_gb']:.1f}GB;"
+            f"m_analytic={r.get('analytic_memory_s', 0):.3f}s",
+        ))
+    return rows
+
+
+def main(quick=False):
+    out = []
+    for arch, shape, terms, extra in table():
+        out.append(f"roofline[{arch}|{shape}],0,{terms};{extra}")
+    if not out:
+        out.append("roofline[pending],0,run launch/sweep.sh first")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` shrinks sweeps.
+
+  bench_milp        Fig. 14  control-plane scalability (devices/classes/blocks)
+  bench_e2e_load    Fig. 6/7/9  max load factor vs NP/DART-r, Poisson+bursty
+  bench_utilization Fig. 8   high/low-class temporal utilization
+  bench_ablation    Fig. 10  reservation vs reactive data plane
+  bench_sensitivity Fig. 13  SLO scale / class ratio / margin sweeps
+  bench_kernels     —        kernel micro-benchmarks
+  roofline          §Roofline  table from results/dryrun_*.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_ablation,
+    bench_e2e_load,
+    bench_kernels,
+    bench_milp,
+    bench_sensitivity,
+    bench_utilization,
+    roofline,
+)
+
+BENCHES = {
+    "milp": bench_milp.main,
+    "e2e_load": bench_e2e_load.main,
+    "utilization": bench_utilization.main,
+    "ablation": bench_ablation.main,
+    "sensitivity": bench_sensitivity.main,
+    "kernels": bench_kernels.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for line in fn(quick=args.quick):
+                print(line, flush=True)
+            print(f"bench_{name}_total,{(time.perf_counter()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"bench_{name}_total,0,FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Microscopic plan analysis (paper section 7.5, Fig. 11): show the pooled
+pipelines PPipe builds for one model on a 16-chip testbed, including partition
+points, vGPU fractions, unified batch sizes and per-stage throughput matching.
+
+    PYTHONPATH=src python examples/plan_explorer.py [--arch internlm2-20b]
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import costmodel as cm
+from repro.core.baselines import plan_dart_r, plan_np
+from repro.core.enumerate import plan_cluster
+from repro.core.types import ClusterSpec
+
+from benchmarks.common import make_setup  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-20b", choices=ARCH_IDS)
+    ap.add_argument("--slo-scale", type=float, default=5.0)
+    args = ap.parse_args()
+
+    cluster = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
+    profiles, tables = make_setup([args.arch], cluster, slo_scale=args.slo_scale)
+    prof = profiles[args.arch]
+    print(f"arch={args.arch}  SLO={prof.slo_s*1e3:.2f} ms  "
+          f"blocks={prof.n_blocks}  cluster={cluster.counts}")
+
+    # per-block cross-class latency ratio (the paper Fig. 3 diversity)
+    tbl = tables[args.arch]
+    print("\nblock latency ratios lo/hi (batch 1):")
+    for b in prof.blocks:
+        r = tbl.lat[(b.index, "tpu-lo", 1, 1)] / tbl.lat[(b.index, "tpu-hi", 1, 1)]
+        bar = "#" * int(r * 10)
+        print(f"  block {b.index:2d} [{b.layer_start:3d}:{b.layer_end:3d})  "
+              f"ratio={r:4.2f} {bar}")
+
+    for name, planner in (
+        ("PPipe", lambda: plan_cluster(profiles, tables, cluster)),
+        ("NP", lambda: plan_np(profiles, tables, cluster)),
+        ("DART-r", lambda: plan_dart_r(profiles, tables, cluster)),
+    ):
+        res = planner()
+        print(f"\n== {name} ==")
+        print(res.plan.summary())
+
+
+if __name__ == "__main__":
+    main()

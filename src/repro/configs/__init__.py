@@ -1,0 +1,12 @@
+from .registry import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    SUBQUADRATIC,
+    ShapeSpec,
+    all_cells,
+    cache_pspec,
+    get_config,
+    input_specs,
+    rules_for,
+    shape_applicable,
+)

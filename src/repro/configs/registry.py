@@ -1,0 +1,202 @@
+"""Architecture registry + assigned input shapes + input_specs().
+
+Every (arch x shape) cell of the assignment is resolved here: configs with the
+exact published dims, the four shape points, applicability rules (long_500k is
+sub-quadratic-only; skips recorded in the dry-run matrix), and
+ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig, ShardingRules
+
+ARCH_MODULES = {
+    "stablelm-3b": "stablelm_3b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-14b": "qwen3_14b",
+    "llava-next-34b": "llava_next_34b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_IDS = list(ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs whose sequence mixing is sub-quadratic with O(1)-ish state (may run
+# long_500k); everything else skips it (full attention at 500k context).
+SUBQUADRATIC = {"xlstm-1.3b", "zamba2-2.7b"}
+
+
+def shape_applicable(arch: str, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "full-attention arch: 500k-token decode excluded by assignment"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+# ----------------------------------------------------------------------------
+# Sharding rules per shape kind
+# ----------------------------------------------------------------------------
+
+
+# Named sharding variants for the perf hillclimb (EXPERIMENTS.md section Perf).
+#   pure_dp     — small models: fold the model axis into DP (kills Megatron-TP
+#                 activation all-reduces; weights/moments ZeRO-sharded over DP)
+#   megatron_sp — sequence-parallel residuals: seq sharded over the model axis
+#                 between blocks => reduce-scatter+all-gather replaces the 2x
+#                 bigger activation all-reduce
+#   ep_fsdp     — MoE expert weights additionally sharded over DP on the
+#                 expert-FFN dim (FSDP-style) so 400B/671B fit per-device HBM
+VARIANTS = ("baseline", "pure_dp", "megatron_sp", "ep_fsdp")
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec, multi_pod: bool,
+              variant: str = "baseline") -> ShardingRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    batch_axes = None if shape.global_batch == 1 else dp
+    if variant == "pure_dp":
+        batch_axes = None if shape.global_batch == 1 else dp + ("model",)
+        rules = {
+            "batch": batch_axes,
+            "cache_seq": "model" if shape.kind == "decode" else None,
+        }
+        return ShardingRules(rules={**{k: None for k in (
+            "heads", "kv_heads", "ffn", "experts", "vocab", "d_inner",
+            "ssm_heads", "embed", "layers", "lora", "seq", "state",
+            "expert_ff")}, **rules})
+    rules = {
+        "batch": batch_axes,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "experts": "model",
+        "vocab": "model",
+        "d_inner": "model",
+        "ssm_heads": "model" if cfg.n_heads and cfg.family == "hybrid" else None,
+        "cache_seq": "model" if shape.kind == "decode" else None,
+        "embed": None,
+        "layers": None,
+        "lora": None,
+        "seq": "model" if variant == "megatron_sp" else None,
+        "state": None,
+        "expert_ff": dp if variant == "ep_fsdp" else None,
+    }
+    if cfg.family == "ssm":  # xlstm: 4 heads — shard d_inner dims only
+        rules["ssm_heads"] = None
+    return ShardingRules(rules=rules)
+
+
+# ----------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch, shape)
+# ----------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh: Mesh | None, spec: P):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh: Mesh | None = None,
+    rules: ShardingRules | None = None,
+) -> dict:
+    """Abstract inputs for the step function of this (arch, shape) cell.
+
+    train  -> {"tokens", ...}                       (batch = per-step tokens)
+    prefill-> same, without labels
+    decode -> {"token", "cache", "cur_len"}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    rules = rules or rules_for(cfg, shape, multi_pod=bool(mesh and "pod" in mesh.axis_names))
+    bspec = rules.spec("batch", None)
+
+    def tok(shape_):
+        return _sds(shape_, jnp.int32, mesh, bspec)
+
+    def emb(shape_):
+        return _sds(shape_, cfg.dtype, mesh, rules.spec("batch", None, None))
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {"frames": emb((B, S, cfg.d_model)), "tokens": tok((B, S))}
+        if cfg.family == "vlm":
+            F = cfg.frontend_tokens
+            return {"tokens": tok((B, S - F)), "patches": emb((B, F, cfg.d_model))}
+        return {"tokens": tok((B, S))}
+
+    # decode: cache shapes via eval_shape over init_cache
+    from repro.models.model_zoo import build_model
+
+    model = build_model(cfg, rules)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+
+    def attach(sds_leaf, pspec_leaf):
+        return _sds(sds_leaf.shape, sds_leaf.dtype, mesh, pspec_leaf)
+
+    cache_specs = jax.tree.map(
+        lambda leaf: attach(leaf, cache_pspec(rules, leaf.shape, B, S)), cache_shapes
+    )
+    return {
+        "token": tok((B, 1)),
+        "cache": cache_specs,
+        "cur_len": _sds((), jnp.int32, mesh, P()),
+    }
+
+
+def cache_pspec(rules: ShardingRules, shape: tuple[int, ...], B: int, S: int) -> P:
+    """PartitionSpec for a cache leaf.
+
+    KV-style caches carry a length-S time axis -> (layers, batch, cache_seq,
+    replicated...).  SSM state tensors have no time axis -> shard batch only
+    (states are O(d_state) and cheap to replicate across the model axis).
+    """
+    nd = len(shape)
+    seq_axis = next((i for i, e in enumerate(shape) if i >= 2 and e == S), None)
+    batch_axis = next((i for i, e in enumerate(shape) if i <= 2 and e == B), None)
+    dims: list[str | None] = [None] * nd
+    if batch_axis is not None and B > 1:
+        dims[batch_axis] = "batch"
+    if seq_axis is not None and seq_axis != batch_axis:
+        dims[seq_axis] = "cache_seq"
+    return rules.spec(*dims)

@@ -1,0 +1,22 @@
+"""PPipe core: MILP control plane + reservation-based data plane.
+
+The paper's primary contribution lives here: pre-partitioning (blocks),
+the analytical profiler (costmodel), the literal Appendix-A.2 MILP (milp)
+and its scalable template-enumeration equivalent (enumerate), the plan
+dataclasses (plan), and the data plane — reservation tables + probe/reserve
+(reservation), adaptive batching schedulers (scheduler), and the
+discrete-event simulator (simulator).
+"""
+
+from . import baselines, blocks, costmodel, milp, plan, reservation, runtime, scheduler, simulator, types  # noqa: F401
+from .enumerate import plan_cluster  # noqa: F401
+from .plan import ClusterPlan, PipelinePlan, StagePlan  # noqa: F401
+from .types import (  # noqa: F401
+    ACCEL_CLASSES,
+    TPU_HI,
+    TPU_LO,
+    AcceleratorClass,
+    ClusterSpec,
+    ModelProfile,
+    Request,
+)

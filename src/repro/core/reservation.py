@@ -1,0 +1,254 @@
+"""Resource reservation mechanism (paper section 5.4, Algorithm 2).
+
+Every schedulable resource — virtual device, host uplink, host downlink —
+carries a `Timeline` of reserved half-open intervals.  `probe()` walks a
+pooled pipeline greedily, choosing for each partition the pool member that
+minimizes batch completion time given current reservations, and returns the
+path plus the exact intervals to reserve; `reserve()` commits them.  Feature-
+map transfers require *simultaneous* slots on the sender's uplink and the
+receiver's downlink (`earliest_slot_multi`).
+
+Feedback correction (`Timeline.correct`) re-synchronizes the scheduler's view
+with actual execution times reported by nodes.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+
+INF = float("inf")
+
+
+class Timeline:
+    """Sorted, non-overlapping reservation intervals for one resource."""
+
+    __slots__ = ("starts", "ends")
+
+    def __init__(self) -> None:
+        self.starts: list[float] = []
+        self.ends: list[float] = []
+
+    def earliest_slot(self, t: float, dur: float) -> float:
+        """Earliest start >= t such that [start, start+dur) is free."""
+        if dur <= 0:
+            return t
+        i = bisect.bisect_right(self.ends, t)  # first interval ending after t
+        cur = t
+        while i < len(self.starts):
+            if cur + dur <= self.starts[i] + 1e-12:
+                return cur
+            cur = max(cur, self.ends[i])
+            i += 1
+        return cur
+
+    def reserve(self, start: float, dur: float) -> None:
+        if dur <= 0:
+            return
+        end = start + dur
+        i = bisect.bisect_left(self.starts, start)
+        # merge with neighbours if touching/overlapping
+        if i > 0 and self.ends[i - 1] >= start - 1e-12:
+            i -= 1
+            start = min(start, self.starts[i])
+            end = max(end, self.ends[i])
+            del self.starts[i], self.ends[i]
+        while i < len(self.starts) and self.starts[i] <= end + 1e-12:
+            end = max(end, self.ends[i])
+            del self.starts[i], self.ends[i]
+        self.starts.insert(i, start)
+        self.ends.insert(i, end)
+
+    def correct(self, planned_start: float, planned_dur: float,
+                actual_start: float, actual_dur: float) -> None:
+        """Feedback correction: replace a planned interval with reality."""
+        self.release(planned_start, planned_dur)
+        self.reserve(actual_start, actual_dur)
+
+    def release(self, start: float, dur: float) -> None:
+        """Remove [start, start+dur) from the reserved set (splitting if needed)."""
+        end = start + dur
+        i = 0
+        while i < len(self.starts):
+            s, e = self.starts[i], self.ends[i]
+            if e <= start + 1e-12 or s >= end - 1e-12:
+                i += 1
+                continue
+            del self.starts[i], self.ends[i]
+            if s < start:
+                self.starts.insert(i, s)
+                self.ends.insert(i, start)
+                i += 1
+            if e > end:
+                self.starts.insert(i, end)
+                self.ends.insert(i, e)
+                i += 1
+
+    def busy_between(self, t0: float, t1: float) -> float:
+        total = 0.0
+        for s, e in zip(self.starts, self.ends):
+            total += max(0.0, min(e, t1) - max(s, t0))
+        return total
+
+    def gc(self, now: float) -> None:
+        """Drop intervals fully in the past (keeps probe() O(near-future))."""
+        i = bisect.bisect_right(self.ends, now)
+        if i > 0:
+            del self.starts[:i], self.ends[:i]
+
+
+def earliest_slot_multi(timelines: list[Timeline], t: float, dur: float) -> float:
+    """Earliest start >= t at which *all* timelines are free for `dur`
+    (paper: simultaneous uplink+downlink availability)."""
+    cur = t
+    for _ in range(1000):
+        nxt = cur
+        for tl in timelines:
+            nxt = max(nxt, tl.earliest_slot(nxt, dur))
+        if nxt == cur:
+            return cur
+        cur = nxt
+    return cur  # pragma: no cover - pathological fragmentation
+
+
+# ----------------------------------------------------------------------------
+# Instantiated cluster resources
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class NodeRes:
+    node_id: int
+    accel_class: str
+    uplink: Timeline = field(default_factory=Timeline)
+    downlink: Timeline = field(default_factory=Timeline)
+    nic_bw: float = 0.0
+
+
+@dataclass
+class VDevRes:
+    vdev_id: int
+    node: NodeRes
+    chip_id: int
+    accel_class: str
+    vfrac: int
+    timeline: Timeline = field(default_factory=Timeline)
+    busy_s: float = 0.0  # accumulated actual execution time (utilization metric)
+
+
+@dataclass
+class Reservation:
+    resource: Timeline
+    start: float
+    dur: float
+    kind: str  # "gpu" | "ul" | "dl"
+    holder: object | None = None  # VDevRes for kind=="gpu"
+
+
+@dataclass
+class ProbeResult:
+    path: list[VDevRes]
+    reservations: list[Reservation]
+    finish_time: float
+    wait_time: float
+    stage_starts: list[float]
+    stage_durs: list[float]
+    xfer_starts: list[float]
+    xfer_durs: list[float]
+
+
+@dataclass
+class StageRuntime:
+    """One partition pool at runtime: members + latency/transfer models."""
+
+    vdevs: list[VDevRes]
+    latency_by_batch: dict[int, float]
+    # bytes to transfer INTO this stage per request (0 for first stage)
+    in_bytes_per_req: float
+
+    def latency(self, bs: int) -> float:
+        if bs in self.latency_by_batch:
+            return self.latency_by_batch[bs]
+        # conservative: next profiled batch size above bs
+        for b in sorted(self.latency_by_batch):
+            if b >= bs:
+                return self.latency_by_batch[b]
+        return self.latency_by_batch[max(self.latency_by_batch)]
+
+
+@dataclass
+class PipelineRuntime:
+    pipeline_id: int
+    model_name: str
+    unified_batch: int
+    stages: list[StageRuntime]
+
+
+def probe(pipeline: PipelineRuntime, bs: int, now: float) -> ProbeResult:
+    """Algorithm 2, probe(): greedy per-stage pool-member selection."""
+    t_g = now
+    path: list[VDevRes] = []
+    resv: list[Reservation] = []
+    wait = 0.0
+    stage_starts: list[float] = []
+    stage_durs: list[float] = []
+    xfer_starts: list[float] = []
+    xfer_durs: list[float] = []
+    last: VDevRes | None = None
+
+    for si, stage in enumerate(pipeline.stages):
+        l_i = stage.latency(bs)
+        best = None  # (finish, gpu, local_resv, wait_delta, xs, xd, ss)
+        for gpu in stage.vdevs:
+            t = t_g
+            local: list[Reservation] = []
+            w = 0.0
+            xs = xd = 0.0
+            if last is not None and stage.in_bytes_per_req > 0:
+                bw = min(last.node.nic_bw, gpu.node.nic_bw)
+                l_n = stage.in_bytes_per_req * bs / bw
+                if last.node is gpu.node:
+                    l_n = 0.0  # co-located: feature map stays on host
+                if l_n > 0:
+                    s = earliest_slot_multi(
+                        [last.node.uplink, gpu.node.downlink], t, l_n
+                    )
+                    w += s - t
+                    local.append(Reservation(last.node.uplink, s, l_n, "ul"))
+                    local.append(Reservation(gpu.node.downlink, s, l_n, "dl"))
+                    xs, xd = s, l_n
+                    t = s + l_n
+            s = gpu.timeline.earliest_slot(t, l_i)
+            w += s - t
+            local.append(Reservation(gpu.timeline, s, l_i, "gpu", holder=gpu))
+            finish = s + l_i
+            if best is None or finish < best[0]:
+                best = (finish, gpu, local, w, xs, xd, s)
+        finish, gpu, local, w, xs, xd, ss = best
+        path.append(gpu)
+        resv.extend(local)
+        wait += w
+        stage_starts.append(ss)
+        stage_durs.append(stage.latency(bs))
+        if si > 0:
+            xfer_starts.append(xs)
+            xfer_durs.append(xd)
+        t_g = finish
+        last = gpu
+
+    return ProbeResult(
+        path=path,
+        reservations=resv,
+        finish_time=t_g,
+        wait_time=wait,
+        stage_starts=stage_starts,
+        stage_durs=stage_durs,
+        xfer_starts=xfer_starts,
+        xfer_durs=xfer_durs,
+    )
+
+
+def reserve(result: ProbeResult) -> None:
+    """Algorithm 2, reserve(): commit every interval returned by probe()."""
+    for r in result.reservations:
+        r.resource.reserve(r.start, r.dur)

@@ -1,0 +1,124 @@
+"""Instantiate a ClusterPlan into runtime resources (nodes, chips, vdevs).
+
+Chips are dedicated to one partition pool (the paper loads one partition's
+weights per virtual GPU); each chip allocated to a stage with vGPU fraction
+1/v exposes v virtual devices.  Hosts group `chips_per_host` chips behind one
+NIC — the source of network contention D3.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from . import costmodel
+from .plan import ClusterPlan, PipelinePlan
+from .reservation import NodeRes, PipelineRuntime, StageRuntime, VDevRes
+from .types import ClusterSpec, ModelProfile
+
+
+@dataclass
+class ClusterRuntime:
+    cluster: ClusterSpec
+    plan: ClusterPlan
+    nodes: list[NodeRes] = field(default_factory=list)
+    vdevs: list[VDevRes] = field(default_factory=list)
+    pipelines: list[PipelineRuntime] = field(default_factory=list)
+
+    def pipelines_of(self, model_name: str) -> list[PipelineRuntime]:
+        return [p for p in self.pipelines if p.model_name == model_name]
+
+    def gc(self, now: float) -> None:
+        for v in self.vdevs:
+            v.timeline.gc(now)
+        for n in self.nodes:
+            n.uplink.gc(now)
+            n.downlink.gc(now)
+
+
+def build_runtime(
+    plan: ClusterPlan,
+    profiles: dict[str, ModelProfile],
+    cluster: ClusterSpec | None = None,
+) -> ClusterRuntime:
+    cluster = cluster or plan.cluster
+    rt = ClusterRuntime(cluster=cluster, plan=plan)
+
+    # chip allocator per class; chips fill hosts of `chips_per_host`
+    next_chip = {c: 0 for c in cluster.classes}
+    nodes_by_key: dict[tuple[str, int], NodeRes] = {}
+
+    def alloc_chip(cname: str) -> tuple[int, NodeRes]:
+        cid = next_chip[cname]
+        if cid >= cluster.counts[cname]:
+            raise ValueError(f"plan over-allocates class {cname}")
+        next_chip[cname] = cid + 1
+        host = cid // cluster.chips_per_host
+        key = (cname, host)
+        if key not in nodes_by_key:
+            node = NodeRes(
+                node_id=len(rt.nodes),
+                accel_class=cname,
+                nic_bw=cluster.effective_nic_bw(cname),
+            )
+            nodes_by_key[key] = node
+            rt.nodes.append(node)
+        return cid, nodes_by_key[key]
+
+    for pid, pp in enumerate(plan.pipelines):
+        profile = profiles[pp.model_name]
+        stages: list[StageRuntime] = []
+        for d, sp in enumerate(pp.stages):
+            vdevs: list[VDevRes] = []
+            n_chips = math.ceil(sp.n_vdev / sp.vfrac)
+            slots = 0
+            for _ in range(n_chips):
+                cid, node = alloc_chip(sp.accel_class)
+                for _ in range(sp.vfrac):
+                    if slots >= sp.n_vdev:
+                        break
+                    vd = VDevRes(
+                        vdev_id=len(rt.vdevs),
+                        node=node,
+                        chip_id=cid,
+                        accel_class=sp.accel_class,
+                        vfrac=sp.vfrac,
+                    )
+                    rt.vdevs.append(vd)
+                    vdevs.append(vd)
+                    slots += 1
+            accel = cluster.accel(sp.accel_class)
+            lat_by_b = {
+                b: costmodel.partition_latency(
+                    profile.blocks, sp.block_start, sp.block_end, accel, sp.vfrac, b
+                )
+                for b in range(1, pp.batch_size + 1)
+            }
+            in_bytes = (
+                profile.boundary_bytes(sp.block_start, 1) if d > 0 else 0.0
+            )
+            stages.append(
+                StageRuntime(
+                    vdevs=vdevs, latency_by_batch=lat_by_b, in_bytes_per_req=in_bytes
+                )
+            )
+        rt.pipelines.append(
+            PipelineRuntime(
+                pipeline_id=pid,
+                model_name=pp.model_name,
+                unified_batch=pp.batch_size,
+                stages=stages,
+            )
+        )
+    return rt
+
+
+def utilization_by_class(rt: ClusterRuntime, horizon_s: float) -> dict[str, float]:
+    """Temporal chip utilization per accelerator class (paper Fig. 8)."""
+    busy: dict[str, float] = {c: 0.0 for c in rt.cluster.classes}
+    for v in rt.vdevs:
+        busy[v.accel_class] += v.busy_s / v.vfrac
+    return {
+        c: busy[c] / (rt.cluster.counts[c] * horizon_s) if rt.cluster.counts[c] else 0.0
+        for c in rt.cluster.classes
+    }

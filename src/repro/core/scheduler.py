@@ -1,0 +1,191 @@
+"""Adaptive batching schedulers (paper section 5.4, Algorithm 1) and the
+reactive baseline used in the Fig. 10 ablation.
+
+The reservation scheduler makes three decisions per batch: which pooled
+pipeline (lowest probe() waiting time at the pipeline's unified batch size),
+which path within it, and the largest batch size whose probed completion time
+meets the oldest request's deadline.  It then drops / waits / dispatches.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from .reservation import PipelineRuntime, ProbeResult, probe, reserve
+from .runtime import ClusterRuntime
+from .types import Request
+
+
+@dataclass
+class Dispatch:
+    pipeline: PipelineRuntime
+    requests: list[Request]
+    probe_result: ProbeResult
+
+
+@dataclass
+class Drop:
+    request: Request
+
+
+@dataclass
+class WaitUntil:
+    time_s: float
+
+
+@dataclass
+class SchedulerStats:
+    probe_calls: int = 0
+    dispatches: int = 0
+    drops: int = 0
+
+    @property
+    def probes_per_dispatch(self) -> float:
+        return self.probe_calls / max(1, self.dispatches)
+
+
+class ReservationScheduler:
+    """PPipe's data-plane scheduler (Algorithm 1)."""
+
+    def __init__(self, runtime: ClusterRuntime) -> None:
+        self.runtime = runtime
+        self.queues: dict[str, deque[Request]] = {}
+        self.stats = SchedulerStats()
+        for p in runtime.pipelines:
+            self.queues.setdefault(p.model_name, deque())
+
+    def enqueue(self, req: Request) -> None:
+        self.queues.setdefault(req.model_name, deque()).append(req)
+
+    def pending(self, model: str) -> int:
+        return len(self.queues.get(model, ()))
+
+    def schedule(self, model: str, now: float) -> list[Dispatch | Drop | WaitUntil]:
+        """Run Algorithm 1 until the queue cannot make progress at `now`."""
+        out: list[Dispatch | Drop | WaitUntil] = []
+        q = self.queues.get(model)
+        pipelines = self.runtime.pipelines_of(model)
+        if not q or not pipelines:
+            return out
+        while q:
+            # Step 1: pick the pipeline with the lowest waiting time at its
+            # unified batch size.
+            best_p, best_wait = None, float("inf")
+            for p in pipelines:
+                r = probe(p, p.unified_batch, now)
+                self.stats.probe_calls += 1
+                if r.wait_time < best_wait:
+                    best_wait, best_p = r.wait_time, p
+            p = best_p
+            # Step 2: largest batch size meeting the oldest deadline.
+            chosen_bs, chosen_r = 0, None
+            for bs in range(p.unified_batch, 0, -1):
+                r = probe(p, bs, now)
+                self.stats.probe_calls += 1
+                if r.finish_time <= q[0].deadline_s + 1e-12:
+                    chosen_bs, chosen_r = bs, r
+                    break
+            if chosen_bs == 0:
+                self.stats.drops += 1
+                out.append(Drop(q.popleft()))
+                continue  # start over with the next oldest request
+            if len(q) < chosen_bs:
+                # Wait for more requests until the last moment the queue can
+                # still be served without violating q[0]'s SLO.
+                slack = q[0].deadline_s - chosen_r.finish_time
+                wake = now + max(0.0, slack)
+                if slack > 1e-6:
+                    out.append(WaitUntil(wake))
+                    break
+                chosen_bs = len(q)  # last moment: dispatch what we have
+                chosen_r = probe(p, chosen_bs, now)
+                self.stats.probe_calls += 1
+                if chosen_r.finish_time > q[0].deadline_s + 1e-12:
+                    self.stats.drops += 1
+                    out.append(Drop(q.popleft()))
+                    continue
+            reserve(chosen_r)
+            batch = [q.popleft() for _ in range(chosen_bs)]
+            self.stats.dispatches += 1
+            out.append(Dispatch(pipeline=p, requests=batch, probe_result=chosen_r))
+        return out
+
+
+class ReactiveScheduler:
+    """Ablation baseline (paper section 7.4): per-pool adaptive batching with no
+    resource-usage tracking.  Each dispatch greedily takes the least-loaded
+    pool member and the largest batch whose nominal latency fits the oldest
+    deadline; network transfers queue FIFO on NICs without coordination, so
+    contention (D3) emerges as queueing delay."""
+
+    def __init__(self, runtime: ClusterRuntime) -> None:
+        self.runtime = runtime
+        self.queues: dict[str, deque[Request]] = {}
+        self.stats = SchedulerStats()
+        # actual availability times, maintained reactively (not reservations)
+        self.vdev_free: dict[int, float] = {v.vdev_id: 0.0 for v in runtime.vdevs}
+        for p in runtime.pipelines:
+            self.queues.setdefault(p.model_name, deque())
+
+    def enqueue(self, req: Request) -> None:
+        self.queues.setdefault(req.model_name, deque()).append(req)
+
+    def pending(self, model: str) -> int:
+        return len(self.queues.get(model, ()))
+
+    def schedule(self, model: str, now: float) -> list[Dispatch | Drop | WaitUntil]:
+        out: list[Dispatch | Drop | WaitUntil] = []
+        q = self.queues.get(model)
+        pipelines = self.runtime.pipelines_of(model)
+        if not q or not pipelines:
+            return out
+        while q:
+            # pick pipeline whose first-stage pool frees up soonest
+            def first_free(p: PipelineRuntime) -> float:
+                return min(self.vdev_free[v.vdev_id] for v in p.stages[0].vdevs)
+
+            p = min(pipelines, key=first_free)
+            start = max(now, first_free(p))
+            # largest batch whose nominal (reservation-blind) completion meets
+            # the oldest deadline — i.e. the paper's per-pool SLO check.
+            nominal = lambda bs: start + sum(s.latency(bs) for s in p.stages)
+            chosen_bs = 0
+            for bs in range(p.unified_batch, 0, -1):
+                if nominal(bs) <= q[0].deadline_s:
+                    chosen_bs = bs
+                    break
+            if chosen_bs == 0:
+                self.stats.drops += 1
+                out.append(Drop(q.popleft()))
+                continue
+            if len(q) < chosen_bs:
+                slack = q[0].deadline_s - nominal(min(len(q), chosen_bs))
+                if slack > 1e-6:
+                    out.append(WaitUntil(now + slack))
+                    break
+                chosen_bs = len(q)
+            # build a pseudo probe result: greedy first-free member per stage,
+            # NO network awareness (transfer timing resolved by the simulator)
+            path = []
+            t = start
+            stage_starts, stage_durs = [], []
+            for s in p.stages:
+                gpu = min(s.vdevs, key=lambda v: self.vdev_free[v.vdev_id])
+                st = max(t, self.vdev_free[gpu.vdev_id])
+                dur = s.latency(chosen_bs)
+                path.append(gpu)
+                stage_starts.append(st)
+                stage_durs.append(dur)
+                self.vdev_free[gpu.vdev_id] = st + dur
+                t = st + dur
+            r = ProbeResult(
+                path=path, reservations=[], finish_time=t, wait_time=start - now,
+                stage_starts=stage_starts, stage_durs=stage_durs,
+                xfer_starts=[0.0] * (len(path) - 1),
+                xfer_durs=[-1.0] * (len(path) - 1),  # -1 => simulator computes
+            )
+            batch = [q.popleft() for _ in range(chosen_bs)]
+            self.stats.dispatches += 1
+            out.append(Dispatch(pipeline=p, requests=batch, probe_result=r))
+        return out

@@ -1,0 +1,1 @@
+from .requests import bursty_trace, poisson_trace, load_sweep  # noqa: F401

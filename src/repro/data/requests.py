@@ -1,0 +1,115 @@
+"""Inference request trace generators (paper section 7.1, "Workloads").
+
+The paper replays Microsoft Azure Functions traces: MAF-2019 (per-minute
+counts -> Poisson arrivals, the "Poisson" workload) and MAF-2021 (per-request
+timestamps, markedly burstier -> the "Bursty" workload).  Those traces are not
+redistributable offline, so we generate statistically matching stand-ins:
+
+* `poisson_trace`   — homogeneous Poisson arrivals at rate lambda.
+* `bursty_trace`    — a Markov-modulated Poisson process (two-state on/off
+  burst envelope with heavy-tailed burst intensities), the standard generative
+  model for serverless-invocation burstiness.
+
+All generators are deterministic per seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Request
+
+
+def poisson_trace(
+    rate_rps: float,
+    horizon_s: float,
+    slo_s: float,
+    model_name: str = "model",
+    seed: int = 0,
+    start_id: int = 0,
+) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    n_expect = max(1, int(rate_rps * horizon_s * 1.2 + 10))
+    gaps = rng.exponential(1.0 / max(rate_rps, 1e-9), size=n_expect)
+    times = np.cumsum(gaps)
+    times = times[times < horizon_s]
+    return [
+        Request(
+            arrival_s=float(t),
+            req_id=start_id + i,
+            model_name=model_name,
+            deadline_s=float(t) + slo_s,
+        )
+        for i, t in enumerate(times)
+    ]
+
+
+def bursty_trace(
+    rate_rps: float,
+    horizon_s: float,
+    slo_s: float,
+    model_name: str = "model",
+    seed: int = 0,
+    start_id: int = 0,
+    burst_rate_mult: float = 4.0,
+    calm_rate_mult: float = 0.4,
+    mean_burst_s: float = 0.5,
+    mean_calm_s: float = 2.0,
+) -> list[Request]:
+    """Markov-modulated Poisson arrivals whose long-run average equals
+    `rate_rps` (burst/calm multipliers are renormalized)."""
+    rng = np.random.default_rng(seed)
+    # renormalize so the time-averaged rate equals rate_rps
+    frac_burst = mean_burst_s / (mean_burst_s + mean_calm_s)
+    avg_mult = frac_burst * burst_rate_mult + (1 - frac_burst) * calm_rate_mult
+    burst_rate = rate_rps * burst_rate_mult / avg_mult
+    calm_rate = rate_rps * calm_rate_mult / avg_mult
+
+    times: list[float] = []
+    t = 0.0
+    in_burst = False
+    while t < horizon_s:
+        dwell = rng.exponential(mean_burst_s if in_burst else mean_calm_s)
+        rate = burst_rate if in_burst else calm_rate
+        seg_end = min(t + dwell, horizon_s)
+        cur = t
+        while True:
+            cur += rng.exponential(1.0 / max(rate, 1e-9))
+            if cur >= seg_end:
+                break
+            times.append(cur)
+        t = seg_end
+        in_burst = not in_burst
+    return [
+        Request(
+            arrival_s=float(tt),
+            req_id=start_id + i,
+            model_name=model_name,
+            deadline_s=float(tt) + slo_s,
+        )
+        for i, tt in enumerate(times)
+    ]
+
+
+def multi_model_trace(
+    rates: dict[str, float],
+    horizon_s: float,
+    slos: dict[str, float],
+    bursty: bool = False,
+    seed: int = 0,
+) -> list[Request]:
+    """Interleaved trace for serving several DNNs in parallel (paper 7.2)."""
+    gen = bursty_trace if bursty else poisson_trace
+    out: list[Request] = []
+    for i, (name, rate) in enumerate(sorted(rates.items())):
+        out.extend(
+            gen(rate, horizon_s, slos[name], model_name=name, seed=seed + 1000 * i,
+                start_id=len(out) * 10_000_000)
+        )
+    return sorted(out)
+
+
+def load_sweep(start: float = 0.05, stop: float = 1.0, step: float = 0.05) -> list[float]:
+    """Paper section 7.1: lambda from 0.05 to 1.0 x load factor, step 0.05."""
+    n = int(round((stop - start) / step)) + 1
+    return [round(start + i * step, 4) for i in range(n)]

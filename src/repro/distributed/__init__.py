@@ -1,0 +1,1 @@
+from .collectives import compressed_psum, CompressionState  # noqa: F401

@@ -1,0 +1,87 @@
+"""Distributed-optimization collectives: int8 gradient compression with error
+feedback around the data-parallel all-reduce.
+
+NCCL-world gradient compression hooks into the bucketed all-reduce; the JAX
+adaptation wraps `jax.lax.psum` inside `shard_map` over the DP axis:
+
+    q = quantize_int8(g + error)      # per-tensor symmetric scale
+    s = psum(q) / n                   # int32 accumulate, exact
+    g_hat = dequantize(s)
+    error' = (g + error) - g_hat      # residual kept locally (error feedback)
+
+Wire bytes drop 4x (f32) / 2x (bf16); error feedback keeps SGD convergence
+(Karimireddy et al. 2019).  Unit tests verify the compressed mean converges
+to the exact mean and that training with compression matches uncompressed
+loss within tolerance.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class CompressionState:
+    """Per-parameter error-feedback residuals."""
+
+    error: dict
+
+    @staticmethod
+    def init(params) -> "CompressionState":
+        return CompressionState(
+            error=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        )
+
+
+def compressed_psum_leaf(g: jax.Array, err: jax.Array, axis_name: str):
+    """int8 psum with error feedback for one gradient leaf (inside shard_map).
+
+    Uses a SHARED global scale (pmax of |x|) so the int32 accumulation is
+    exact and each rank's residual is measured against its *own* dequantized
+    contribution — the bounded-error EF-SGD form:
+        mean(dequant_r) == g_hat exactly, |err| <= scale/2.
+    Wire cost: one scalar pmax + an int8-payload psum (4x under f32)."""
+    x = g.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    n = jax.lax.psum(1, axis_name)
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    g_hat = acc.astype(jnp.float32) * scale / n
+    new_err = x - q * scale  # residual vs own dequantized contribution
+    return g_hat.astype(g.dtype), new_err
+
+
+def compressed_psum(
+    grads,
+    state: CompressionState,
+    mesh: Mesh,
+    axis_name: str = "data",
+):
+    """Mean-reduce per-shard gradients over `axis_name` with int8 compression.
+
+    grads are per-DP-shard values (replicated over other axes); returns
+    (mean_grads, new_state)."""
+
+    def one(g, e):
+        fn = shard_map(
+            partial(compressed_psum_leaf, axis_name=axis_name),
+            mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(axis_name), P(axis_name)),
+        )
+        return fn(g, e)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_e = treedef.unflatten([o[1] for o in out])
+    return new_g, CompressionState(error=new_e)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical compute hot spots.
+
+Each kernel package provides:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (interpret=True off-TPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels: flash_attention (prefill), decode_attention (KV-cache reads),
+rmsnorm (fused norm), boundary_quant (PPipe partition-boundary int8
+quantization, paper section 6), ssd_scan (Mamba2/mLSTM chunked scan).
+"""

@@ -1,0 +1,44 @@
+"""Public jit'd wrappers for boundary quantization."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _divisor_block(rows: int, target: int = 256) -> int:
+    for b in range(min(target, rows), 0, -1):
+        if rows % b == 0:
+            return b
+    return 1
+
+
+@jax.jit
+def quantize(x):
+    """x: (..., D) -> (int8 (..., D), f32 scales (..., 1))."""
+    shape = x.shape
+    rows = max(1, x.size // shape[-1])
+    q, s = kernel.quantize(
+        x.reshape(-1, shape[-1]), block_rows=_divisor_block(rows),
+        interpret=not _on_tpu(),
+    )
+    return q.reshape(shape), s.reshape(shape[:-1] + (1,))
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize(q, scale, dtype=jnp.bfloat16):
+    shape = q.shape
+    rows = max(1, q.size // shape[-1])
+    out = kernel.dequantize(
+        q.reshape(-1, shape[-1]), scale.reshape(-1, 1), dtype=dtype,
+        block_rows=_divisor_block(rows), interpret=not _on_tpu(),
+    )
+    return out.reshape(shape)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for boundary quantization."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def roundtrip_error_bound(x: jax.Array) -> jax.Array:
+    """Theoretical per-row bound: |x - dq(q(x))| <= scale/2 elementwise."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1, keepdims=True)
+    return amax / 127.0 / 2.0 + 1e-6

@@ -1,0 +1,98 @@
+"""Decode attention (one token vs a long KV cache) as a Pallas TPU kernel.
+
+Decode is HBM-bound: the kernel streams the KV cache once, block by block,
+with an online-softmax accumulator — grid (batch, kv_head, n_kv_blocks), the
+kv axis innermost/sequential.  GQA query heads of the same group ride along
+in one (G, D) tile so the cache is read once per kv head, not per q head.
+Valid-length masking uses a scalar kv_len carried in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_s: int, n_s_blocks: int):
+    sj = pl.program_id(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bs, Dv)
+    kv_len = len_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bs)
+    pos = sj * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(sj == n_s_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, KH, G, D) — grouped query heads
+    k: jax.Array,  # (B, KH, S, D)
+    v: jax.Array,  # (B, KH, S, D)
+    kv_len: jax.Array,  # () int32 — valid cache prefix
+    scale: float | None = None,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    B, KH, G, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    ns = S // block_s
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_s=block_s, n_s_blocks=ns
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KH, ns),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_s, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)

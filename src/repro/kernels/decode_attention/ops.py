@@ -1,0 +1,21 @@
+"""Public jit'd wrapper for decode attention."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, kv_len, block_s: int = 512):
+    """q: (B, KH, G, D); k/v: (B, KH, S, D); kv_len scalar -> (B, KH, G, D)."""
+    return kernel.decode_attention(
+        q, k, v, kv_len, block_s=block_s, interpret=not _on_tpu()
+    )

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, scale: float | None = None):
+    """q: (B, KH, G, D); k/v: (B, KH, S, D); kv_len: () int32."""
+    B, KH, G, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S) < kv_len
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Public jit'd wrapper: Pallas on TPU, interpret mode elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """q: (B, H, Sq, D); k/v: (B, KH, Sk, D) -> (B, H, Sq, D)."""
+    return kernel.flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=not _on_tpu(),
+    )

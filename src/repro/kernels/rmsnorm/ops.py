@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _divisor_block(rows: int, target: int) -> int:
+    for b in range(min(target, rows), 0, -1):
+        if rows % b == 0:
+            return b
+    return 1
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, eps: float = 1e-5, block_rows: int = 256):
+    """x: (..., D); w: (D,). Leading dims are flattened for tiling."""
+    shape = x.shape
+    rows = max(1, x.size // shape[-1])
+    out = kernel.rmsnorm(
+        x.reshape(-1, shape[-1]), w, eps=eps,
+        block_rows=_divisor_block(rows, block_rows),
+        interpret=not _on_tpu(),
+    )
+    return out.reshape(shape)

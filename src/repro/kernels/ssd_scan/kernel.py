@@ -1,0 +1,114 @@
+"""Chunked state-space scan (Mamba2 SSD / mLSTM) as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm: the GPU version leans on warp-level
+scans; here each chunk is processed as dense (Q x Q) MXU matmuls (intra-chunk
+attention-with-decay) plus a small sequential inter-chunk state recurrence
+carried in VMEM scratch across the innermost (sequential) grid axis.
+
+Grid (batch, head, n_chunks); per-tile VMEM:
+  q/k (Q, DK), v (Q, DV), gates (Q,), state scratch (DK, DV) f32.
+
+Computes  y_t = q_t . sum_{s<=t} exp(cum_g(t)-cum_g(s)+log_i_s) k_s v_s^T
+(the same recurrence as models.ssm.chunked_linear_attention, its oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLIP = 30.0
+
+
+def _ssd_kernel(q_ref, k_ref, v_ref, g_ref, i_ref, y_ref, s_fin_ref, state_ref,
+                *, chunk: int, n_chunks: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (Q, DK)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)  # (Q, DV)
+    g = g_ref[0, 0].astype(jnp.float32)  # (Q,)
+    li = i_ref[0, 0].astype(jnp.float32)  # (Q,)
+
+    cum = jnp.cumsum(g)  # (Q,)
+    total = cum[-1]
+    # intra-chunk decay matrix D[t, s] = exp(cum_t - cum_s + li_s), s <= t
+    dmat = cum[:, None] - cum[None, :] + li[None, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dmat = jnp.where(s_idx <= t_idx, jnp.clip(dmat, -CLIP, CLIP), -jnp.inf)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(dmat)
+    y = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    # inter-chunk contribution through the carried state
+    qg = q * jnp.exp(jnp.clip(cum, -CLIP, CLIP))[:, None]
+    y = y + jax.lax.dot_general(
+        qg, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(total) S + sum_s exp(total - cum_s + li_s) k_s v_s^T
+    w = jnp.exp(jnp.clip(total - cum + li, -CLIP, CLIP))  # (Q,)
+    s_local = jax.lax.dot_general(
+        k * w[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    state_ref[...] = jnp.exp(jnp.clip(total, -CLIP, CLIP)) * state_ref[...] + s_local
+
+    @pl.when(cj == n_chunks - 1)
+    def _emit_state():
+        s_fin_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan(
+    q: jax.Array,  # (B, NH, T, DK)
+    k: jax.Array,  # (B, NH, T, DK)
+    v: jax.Array,  # (B, NH, T, DV)
+    log_g: jax.Array,  # (B, NH, T)
+    log_i: jax.Array | None = None,  # (B, NH, T)
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    B, NH, T, DK = q.shape
+    DV = v.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    if log_i is None:
+        log_i = jnp.zeros_like(log_g)
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, s_fin = pl.pallas_call(
+        kern,
+        grid=(B, NH, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, DK), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, DK), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, DV), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, DV), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, DK, DV), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NH, T, DV), v.dtype),
+            jax.ShapeDtypeStruct((B, NH, DK, DV), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((DK, DV), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_g, log_i)
+    return y, s_fin

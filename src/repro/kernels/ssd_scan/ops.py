@@ -1,0 +1,23 @@
+"""Public jit'd wrapper for the SSD chunked scan."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(q, k, v, log_g, log_i=None, chunk: int = 256):
+    """q/k: (B, NH, T, DK); v: (B, NH, T, DV); log gates (B, NH, T).
+
+    Returns (y (B, NH, T, DV), final_state (B, NH, DK, DV))."""
+    return kernel.ssd_scan(
+        q, k, v, log_g, log_i, chunk=chunk, interpret=not _on_tpu()
+    )

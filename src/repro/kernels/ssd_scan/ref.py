@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD scan: naive sequential recurrence over T."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CLIP = 30.0
+
+
+def ssd_scan_ref(q, k, v, log_g, log_i=None):
+    """q/k: (B, NH, T, DK); v: (B, NH, T, DV); gates (B, NH, T).
+
+    y_t = q_t . S_t,   S_t = exp(g_t) S_{t-1} + exp(i_t) k_t v_t^T
+    """
+    B, NH, T, DK = q.shape
+    DV = v.shape[-1]
+    if log_i is None:
+        log_i = jnp.zeros_like(log_g)
+
+    def step(S, inputs):
+        qt, kt, vt, gt, it = inputs
+        S = jnp.exp(jnp.clip(gt, -CLIP, CLIP))[..., None, None] * S + jnp.einsum(
+            "bh,bhd,bhv->bhdv", jnp.exp(jnp.clip(it, -CLIP, CLIP)),
+            kt.astype(jnp.float32), vt.astype(jnp.float32))
+        y = jnp.einsum("bhd,bhdv->bhv", qt.astype(jnp.float32), S)
+        return S, y
+
+    S0 = jnp.zeros((B, NH, DK, DV), jnp.float32)
+    xs = (
+        q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3), v.transpose(2, 0, 1, 3),
+        log_g.transpose(2, 0, 1).astype(jnp.float32),
+        log_i.transpose(2, 0, 1).astype(jnp.float32),
+    )
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(v.dtype), S_fin

@@ -1,0 +1,220 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+`compiled.cost_analysis()` supplies per-device HLO FLOPs and bytes (the
+post-SPMD program is per-device).  Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO text and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants (task spec): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI per chip.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([\w\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (possibly a tuple)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt == "token" or dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=dict)
+    count_by_op: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in (per-device) optimized HLO."""
+    # pass 1: shapes of every defined value
+    shapes: dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = None
+        for c in COLLECTIVE_OPS:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        # operand names inside the call parentheses
+        call = line[line.index(op) + len(op):]
+        operands = re.findall(r"%([\w.\-]+)", call.split(")")[0] if "(" in call else "")
+        nbytes = sum(shape_bytes(shapes.get(o, "")) for o in operands)
+        if nbytes == 0:
+            # fall back to result shape
+            nbytes = shape_bytes(m.group(2))
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + nbytes
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "n_devices": self.n_devices,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, n_devices: int) -> tuple[RooflineTerms, dict]:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    colls = parse_collectives(text)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_size": ma.argument_size_in_bytes,
+        "output_size": ma.output_size_in_bytes,
+        "temp_size": ma.temp_size_in_bytes,
+        "alias_size": ma.alias_size_in_bytes,
+        "generated_code_size": ma.generated_code_size_in_bytes,
+    }
+    terms = RooflineTerms(
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm,
+        collective_bytes_per_device=colls.total_bytes,
+        n_devices=n_devices,
+    )
+    return terms, {
+        "memory_analysis": mem,
+        "collectives": {"bytes": colls.bytes_by_op, "count": colls.count_by_op},
+        "cost_analysis_raw": {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))},
+    }
+
+
+def model_flops(n_params_active: float, tokens: float, training: bool) -> float:
+    """MODEL_FLOPS = 6*N*D for a training step; 2*N*D for inference."""
+    return (6.0 if training else 2.0) * n_params_active * tokens
+
+
+def analytic_hbm_bytes(cfg, shape, n_devices: int, tp: int = 16) -> float:
+    """Per-device HBM traffic of the *deployed* (flash/chunked) implementation.
+
+    The HLO byte count from the cost-true compile is an upper bound: it
+    materializes unchunked attention scores that flash attention never writes
+    to HBM.  This analytic estimate uses the control-plane cost model's
+    per-layer activation/weight traffic (flash-style assumptions):
+
+      train  : 3*W_local + 4*A_local + 12B/param moments traffic
+      serve  : W_local + A_local (+ KV cache read for decode)
+    """
+    from repro.models.model_zoo import layer_costs
+
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    kv_len = shape.seq_len if shape.kind == "decode" else None
+    costs = layer_costs(cfg, seq)
+    dp = max(1, n_devices // tp)
+    batch_local = max(1, shape.global_batch // dp)
+    W_local = sum(c.weight_bytes for c in costs) / tp
+    A_local = sum(c.act_bytes for c in costs) * batch_local
+    if shape.kind == "train":
+        opt_traffic = W_local * 6.0  # grads + m/v read/write (bf16..f32 mix)
+        return 3.0 * W_local + 4.0 * A_local + opt_traffic
+    if shape.kind == "decode" and kv_len:
+        # KV-cache read dominates decode: bytes = cache_local per step
+        cache = _decode_cache_bytes(cfg, kv_len, shape.global_batch) / n_devices
+        return W_local + A_local + cache
+    return W_local + A_local
+
+
+def _decode_cache_bytes(cfg, kv_len: int, batch: int) -> float:
+    if cfg.mla:
+        per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return cfg.n_layers * batch * kv_len * per_tok * 2.0
+    if cfg.family in ("ssm", "hybrid"):
+        n_attn = cfg.ssm_pattern.count("a")
+        per_tok = n_attn * 2 * cfg.kv_heads * cfg.hd
+        state = cfg.n_layers * batch * cfg.d_model * cfg.ssm_expand * (cfg.d_state or cfg.d_model // max(cfg.n_heads,1)) * 4.0
+        return batch * kv_len * per_tok * 2.0 + state
+    n_self = cfg.n_layers
+    per_tok = n_self * 2 * cfg.kv_heads * cfg.hd
+    cross = (cfg.encoder_layers and cfg.n_layers * batch * kv_len * 2 * cfg.kv_heads * cfg.hd * 2.0) or 0.0
+    return batch * kv_len * per_tok * 2.0 + cross

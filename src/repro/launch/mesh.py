@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Mesh layout:
+  single-pod : (16, 16)        axes ("data", "model")      = 256 chips
+  multi-pod  : (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+The "model" axis carries TP/EP sharding; "data" (x "pod") carries DP.  The
+pod axis maps to the DCN boundary: collectives crossing it are the expensive
+ones, which is why the sharding rules put only batch there.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def dp_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures as pure-JAX functional modules."""
+
+from .common import ModelConfig, ShardingRules  # noqa: F401
+from .model_zoo import build_model, Model  # noqa: F401

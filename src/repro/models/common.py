@@ -1,0 +1,424 @@
+"""Shared model machinery: configs, parameter templates, sharding rules and
+basic ops (RMSNorm, RoPE, MLP, chunked attention).
+
+Parameters are described by `ParamDef` templates carrying logical dimension
+names; one template tree yields (a) initialized arrays, (b) ShapeDtypeStructs
+for the dry-run, and (c) PartitionSpecs under a `ShardingRules` mapping —
+the single source of truth that keeps model code, dry-run and training
+consistent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ----------------------------------------------------------------------------
+# Config
+# ----------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0  # routed-expert hidden dim (deepseek: 2048)
+    dense_layers: int = 0  # leading dense layers before MoE layers
+    capacity_factor: float = 1.25
+    # MLA (deepseek)
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False  # multi-token-prediction auxiliary head (training)
+    # SSM / hybrid
+    ssm_pattern: str = ""  # per-layer codes: m=mamba2, a=shared-attn, M=mLSTM, s=sLSTM
+    d_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # enc-dec
+    encoder_layers: int = 0
+    # modality frontend stub ("patch_embed" | "audio_frames" | "")
+    frontend: str = ""
+    frontend_tokens: int = 0  # prepended embedding tokens from the frontend
+    vocab_pad_multiple: int = 256
+    dtype: Any = jnp.bfloat16
+    # --- compile-shape knobs (see launch/dryrun.py) --------------------------
+    # cost_exact=True widens every inner chunk/scan to the full sequence so
+    # XLA's cost analysis (which counts loop bodies ONCE, not x trip-count)
+    # sees the true FLOPs/bytes; layer_unroll sets the layer-stack scan unroll
+    # so per-layer body cost is recoverable by compiling unroll=1 vs unroll=k.
+    cost_exact: bool = False
+    layer_unroll: int = 1
+    # >1: MoE dispatch runs per token-group (vmapped), groups sharded over DP —
+    # keeps argsort/scatter local per data shard (see moe._dispatch_compute)
+    moe_dispatch_groups: int = 0
+    # weight-gathered FSDP for expert weights (all-gather weights over DP at
+    # use instead of partial-summing outputs; pairs with the ep_fsdp rules)
+    moe_weight_gather: bool = False
+    attn_q_chunk: int = 512
+    attn_k_chunk: int = 1024
+    ce_chunk: int = 2048
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab + m - 1) // m * m
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        shrink = dict(
+            n_layers=min(self.n_layers, 2 + (2 if self.dense_layers else 0)),
+            d_model=128,
+            n_heads=4,
+            kv_heads=min(self.kv_heads, 4) if self.kv_heads else 0,
+            d_ff=256 if self.d_ff else 0,
+            vocab=512,
+            head_dim=32 if self.head_dim or True else 0,
+        )
+        if self.n_experts:
+            # generous capacity: reduced configs must be drop-free so decode
+            # matches prefill exactly (capacity drops are tested separately)
+            shrink.update(n_experts=4, top_k=min(self.top_k, 2), moe_d_ff=64,
+                          dense_layers=min(self.dense_layers, 1),
+                          capacity_factor=8.0)
+        if self.mla:
+            shrink.update(q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=16,
+                          qk_rope_dim=16, v_head_dim=32, head_dim=32)
+        if self.ssm_pattern:
+            pat = _shrink_pattern(self.ssm_pattern)
+            shrink.update(ssm_pattern=pat, n_layers=len(pat), d_state=16,
+                          ssm_head_dim=16, ssm_chunk=8)
+        if self.encoder_layers:
+            shrink.update(encoder_layers=2)
+        if self.frontend:
+            shrink.update(frontend_tokens=8)
+        shrink.update(overrides)
+        return dataclasses.replace(self, **shrink)
+
+
+def _shrink_pattern(pattern: str) -> str:
+    """Keep one repetition of the layer pattern's period."""
+    for period in range(1, len(pattern) + 1):
+        if len(pattern) % period == 0 and pattern == pattern[:period] * (len(pattern) // period):
+            return pattern[:period]
+    return pattern[: min(4, len(pattern))]
+
+
+# ----------------------------------------------------------------------------
+# Parameter templates
+# ----------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    dims: tuple[str | None, ...]  # logical dim names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # default: 1/sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+
+    def initialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(self.dtype)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key) -> dict:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [d.initialize(k) for d, k in zip(leaves, keys)])
+
+
+def param_shapes(defs, rules: "ShardingRules | None" = None, mesh: Mesh | None = None):
+    """ShapeDtypeStructs (optionally with NamedShardings) for the dry-run."""
+
+    def conv(d: ParamDef):
+        if rules is not None and mesh is not None:
+            return jax.ShapeDtypeStruct(
+                d.shape, d.dtype, sharding=NamedSharding(mesh, rules.spec(*d.dims))
+            )
+        return jax.ShapeDtypeStruct(d.shape, d.dtype)
+
+    return jax.tree.map(conv, defs, is_leaf=is_param_def)
+
+
+def param_pspecs(defs, rules: "ShardingRules"):
+    return jax.tree.map(lambda d: rules.spec(*d.dims), defs, is_leaf=is_param_def)
+
+
+def count_params(defs) -> int:
+    return sum(
+        int(np.prod(d.shape)) for d in jax.tree.leaves(defs, is_leaf=is_param_def)
+    )
+
+
+# ----------------------------------------------------------------------------
+# Sharding rules: logical dims -> mesh axes
+# ----------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical dimension names to mesh axis names (None = replicated).
+
+    The default production mapping: batch -> DP axes, heads/ffn/experts/vocab
+    -> the model axis.  Per-arch configs override entries when a dimension is
+    not divisible (e.g. qwen2's 12 heads on a 16-wide model axis).
+    """
+
+    rules: dict[str, Any] = field(default_factory=dict)
+    enabled: bool = True
+
+    def spec(self, *dims: str | None) -> P:
+        if not self.enabled:
+            return P()
+        used = set()
+        parts = []
+        for d in dims:
+            axes = self.rules.get(d) if d else None
+            if axes is None:
+                parts.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def constrain(self, x: jax.Array, *dims: str | None) -> jax.Array:
+        if not self.enabled:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, self.spec(*dims))
+        except (ValueError, RuntimeError):
+            return x  # outside a mesh context (e.g. unit tests)
+
+
+def default_rules(dp_axes: tuple[str, ...], model_axis: str = "model") -> ShardingRules:
+    return ShardingRules(
+        rules={
+            "batch": dp_axes,
+            "heads": model_axis,
+            "kv_heads": model_axis,
+            "ffn": model_axis,
+            "experts": model_axis,
+            "vocab": model_axis,
+            "ssm_heads": model_axis,
+            "d_inner": model_axis,
+            # replicated by default:
+            "seq": None, "embed": None, "layers": None, "head_dim": None,
+            "state": None, "lora": None,
+        }
+    )
+
+
+NO_SHARDING = ShardingRules(enabled=False)
+
+
+# ----------------------------------------------------------------------------
+# Basic ops
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attn_chunks(cfg: "ModelConfig", seq: int) -> tuple[int, int]:
+    """(q_chunk, k_chunk) for chunked attention; full-seq when cost_exact."""
+    if cfg.cost_exact:
+        return seq, seq
+    return cfg.attn_q_chunk, cfg.attn_k_chunk
+
+
+def ssm_chunk_of(cfg: "ModelConfig", seq: int) -> int:
+    return seq if cfg.cost_exact else cfg.ssm_chunk
+
+
+def ce_chunk_of(cfg: "ModelConfig", seq: int) -> int:
+    return seq if cfg.cost_exact else min(seq, cfg.ce_chunk)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down, rules: ShardingRules) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = rules.constrain(h, "batch", None, "ffn")
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_defs(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "gate": ParamDef((d_model, d_ff), ("embed", "ffn"), dtype=dtype),
+        "up": ParamDef((d_model, d_ff), ("embed", "ffn"), dtype=dtype),
+        "down": ParamDef((d_ff, d_model), ("ffn", "embed"), dtype=dtype),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Chunked (flash-style) attention in pure XLA — the memory-safe reference
+# path used for training and the dry-run; the Pallas kernels in
+# repro.kernels implement the same math for the TPU hot path.
+# ----------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Tq, H, D)
+    k: jax.Array,  # (B, Tk, KH, D)
+    v: jax.Array,  # (B, Tk, KH, Dv)
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,  # absolute position of q[0] (decode/cache)
+    kv_len: jax.Array | None = None,  # valid KV prefix length (cache decode)
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    B, Tq, H, D = q.shape
+    _, Tk, KH, Dv = v.shape
+    G = H // KH
+    scale = softmax_scale or 1.0 / math.sqrt(D)
+    q = q.reshape(B, Tq, KH, G, D)
+
+    q_chunk = min(q_chunk, Tq)
+    k_chunk = min(k_chunk, Tk)
+    nq = -(-Tq // q_chunk)
+    nk = -(-Tk // k_chunk)
+    pad_q = nq * q_chunk - Tq
+    pad_k = nk * k_chunk - Tk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Tkp = nk * k_chunk
+    valid_k = Tk if kv_len is None else kv_len
+
+    qs = q.reshape(B, nq, q_chunk, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, k_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, k_chunk, KH, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk  # qblk: (B, qc, KH, G, D)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            k_pos = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk, kblk, preferred_element_type=jnp.float32
+            ) * scale
+            mask = k_pos[None, :] < valid_k
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qc, KH, G, Dv)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Tq].astype(v.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KH, D)
+    v_cache: jax.Array,  # (B, S, KH, Dv)
+    kv_len: jax.Array,  # () or (B,) valid prefix length
+    softmax_scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache (pure-XLA path)."""
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = softmax_scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale
+    pos = jnp.arange(S)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(kv_len).reshape(-1, 1), (B, S))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,314 @@
+"""DeepSeek-V3 (671B): Multi-head Latent Attention + MoE (1 shared + 256
+routed, top-8) + optional Multi-Token Prediction head.
+
+MLA is implemented in two modes:
+ * full/prefill — expand the compressed latent c_kv back to per-head K/V and
+   run chunked flash attention (exact reference math);
+ * decode — "absorbed" form: queries are projected into the latent space and
+   attention runs directly against the compressed cache (c_kv, k_rope), which
+   is why the MLA decode cache is ~14x smaller than GQA at this width.
+
+The first `dense_layers` layers use a dense MLP (DeepSeek-V3 uses 3); the rest
+are MoE layers.  Layer stacks are scanned (two scans) to keep HLO size flat.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from . import transformer as tfm
+from .common import (
+    ModelConfig,
+    ParamDef,
+    ShardingRules,
+    apply_rope,
+    attn_chunks,
+    chunked_attention,
+    mlp_defs,
+    rms_norm,
+    swiglu,
+)
+
+# DeepSeek-V3's dense-layer FFN width (arXiv:2412.19437 Table 2); the assigned
+# spec's d_ff=2048 is the *routed expert* width (cfg.moe_d_ff).
+DENSE_D_FF = 18432
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = cfg.dtype
+    return {
+        "q_a": ParamDef((d, cfg.q_lora_rank), ("embed", "lora"), dtype=dt),
+        "q_a_norm": ParamDef((cfg.q_lora_rank,), ("lora",), init="ones", dtype=dt),
+        "q_b": ParamDef((cfg.q_lora_rank, H, nope + rope), ("lora", "heads", None), dtype=dt),
+        "kv_a": ParamDef((d, cfg.kv_lora_rank + rope), ("embed", None), dtype=dt),
+        "kv_a_norm": ParamDef((cfg.kv_lora_rank,), (None,), init="ones", dtype=dt),
+        "kv_b": ParamDef((cfg.kv_lora_rank, H, nope + vd), (None, "heads", None), dtype=dt),
+        "wo": ParamDef((H * vd, d), ("heads", "embed"), dtype=dt),
+    }
+
+
+def _mla_q(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Query path: low-rank down/up projection + split nope/rope + RoPE."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(jnp.einsum("btd,dl->btl", x, p["q_a"]), p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("btl,lhe->bthe", cq, p["q_b"])  # (B,T,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    """Latent path: compressed c_kv + shared k_rope (what the cache stores)."""
+    rope = cfg.qk_rope_dim
+    kv = jnp.einsum("btd,dl->btl", x, p["kv_a"])
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]  # (B,T,rope) shared across heads
+    return c_kv, k_rope
+
+
+def mla_full(cfg: ModelConfig, rules: ShardingRules, p: dict, x, positions):
+    """Exact (expanded) MLA for train/prefill; returns (out, (c_kv, k_rope))."""
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv, k_rope = _mla_kv_latent(cfg, p, x, positions)
+    kv = jnp.einsum("btl,lhe->bthe", c_kv, p["kv_b"])  # (B,T,H,nope+vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, rope))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = rules.constrain(q, "batch", None, None, None)
+    k = rules.constrain(k, "batch", None, None, None)
+    v = rules.constrain(v, "batch", None, None, None)
+    qc, kc = attn_chunks(cfg, T)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=qc, k_chunk=kc,
+                            softmax_scale=1.0 / math.sqrt(nope + rope))
+    out = jnp.einsum("btx,xd->btd", out.reshape(B, T, -1), p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, rules: ShardingRules, p: dict, x,
+               ckv_cache, krope_cache, cur_len):
+    """Absorbed MLA decode against the compressed cache."""
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), cur_len, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c_kv_new, k_rope_new = _mla_kv_latent(cfg, p, x, positions)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv_new.astype(ckv_cache.dtype), cur_len, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope_new.astype(krope_cache.dtype), cur_len, axis=1)
+
+    w_k = p["kv_b"][..., :nope]  # (kv_lora, H, nope)
+    w_v = p["kv_b"][..., nope:]  # (kv_lora, H, vd)
+    q_c = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_k)  # queries in latent space
+    s = jnp.einsum("bqhl,bsl->bhqs", q_c, ckv_cache,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhr,bsr->bhqs", q_rope, krope_cache,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(nope + rope)
+    S = ckv_cache.shape[1]
+    valid = jnp.arange(S)[None, :] < (cur_len + 1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", pattn.astype(ckv_cache.dtype), ckv_cache)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_v)
+    out = jnp.einsum("bqx,xd->bqd", out.reshape(B, 1, -1), p["wo"])
+    return out, (ckv_cache, krope_cache)
+
+
+# ----------------------------------------------------------------------------
+# Layers and model
+# ----------------------------------------------------------------------------
+
+
+def dense_ff_dim(cfg: ModelConfig) -> int:
+    # Full config uses DeepSeek-V3's published dense width; reduced smoke
+    # configs scale it with the model width instead.
+    return DENSE_D_FF if cfg.d_model >= 4096 else max(cfg.d_ff, 2 * cfg.d_model)
+
+
+def dense_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "attn": mla_defs(cfg),
+        "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "mlp": mlp_defs(cfg.d_model, dense_ff_dim(cfg), cfg.dtype),
+    }
+
+
+def moe_layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "attn": mla_defs(cfg),
+        "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "moe": moe_mod.moe_ffn_defs(cfg),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    n_moe = cfg.n_layers - cfg.dense_layers
+    defs = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02, dtype=cfg.dtype),
+        "dense_layers": tfm.stacked(dense_layer_defs(cfg), cfg.dense_layers),
+        "moe_layers": tfm.stacked(moe_layer_defs(cfg), n_moe),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "head": ParamDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+    if cfg.mtp:
+        defs["mtp"] = {
+            "proj": ParamDef((2 * cfg.d_model, cfg.d_model), (None, "embed"), dtype=cfg.dtype),
+            "norm_h": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+            "norm_e": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+            "layer": dense_layer_defs(cfg),
+        }
+    return defs
+
+
+def _dense_layer_full(cfg, rules, p, x, positions):
+    a, kv = mla_full(cfg, rules, p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps), positions)
+    x = x + a
+    x = x + swiglu(rms_norm(x, p["mlp_norm"], cfg.norm_eps),
+                   p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"], rules)
+    return x, kv
+
+
+def _moe_layer_full(cfg, rules, p, x, positions):
+    a, kv = mla_full(cfg, rules, p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps), positions)
+    x = x + a
+    x = x + moe_mod.moe_ffn(cfg, rules, p["moe"], rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    return x, kv
+
+
+def _hidden_full(cfg, rules, params, tokens, frontend_embeds=None, remat=False,
+                 collect_cache=False):
+    x = tfm.embed_tokens(cfg, rules, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    caches = []
+
+    def dense_body(x, lp):
+        x, kv = _dense_layer_full(cfg, rules, lp, x, positions)
+        return x, kv if collect_cache else None
+
+    def moe_body(x, lp):
+        x, kv = _moe_layer_full(cfg, rules, lp, x, positions)
+        return x, kv if collect_cache else None
+
+    if remat:
+        dense_body = jax.checkpoint(dense_body)
+        moe_body = jax.checkpoint(moe_body)
+    if cfg.dense_layers:
+        x, kv_d = jax.lax.scan(dense_body, x, params["dense_layers"],
+                               unroll=cfg.dense_layers if cfg.cost_exact else 1)
+        caches.append(kv_d)
+    x, kv_m = jax.lax.scan(moe_body, x, params["moe_layers"], unroll=cfg.layer_unroll)
+    caches.append(kv_m)
+    return x, positions, caches
+
+
+def forward(cfg, rules, params, tokens, frontend_embeds=None, remat=False,
+            unembed_out=True):
+    x, _, _ = _hidden_full(cfg, rules, params, tokens, frontend_embeds, remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not unembed_out:
+        return x
+    return tfm.unembed(cfg, rules, params, x)
+
+
+def forward_with_mtp(cfg, rules, params, tokens, remat=False, unembed_out=True):
+    """Returns (logits, mtp_logits) — or the two hidden-state tensors when
+    unembed_out=False (for chunked-CE loss): main next-token prediction over
+    all positions plus the MTP head's (t+2) prediction over [0, S-1)."""
+    x, positions, _ = _hidden_full(cfg, rules, params, tokens, None, remat)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    mp = params["mtp"]
+    emb_next = params["embed"][tokens[:, 1:]]
+    merged = jnp.concatenate(
+        [rms_norm(x[:, :-1], mp["norm_h"], cfg.norm_eps),
+         rms_norm(emb_next, mp["norm_e"], cfg.norm_eps)], axis=-1)
+    y = jnp.einsum("btd,dm->btm", merged, mp["proj"])
+    y, _ = _dense_layer_full(cfg, rules, mp["layer"], y, positions[:, :-1])
+    y = rms_norm(y, params["final_norm"], cfg.norm_eps)
+    if not unembed_out:
+        return h, y
+    return tfm.unembed(cfg, rules, params, h), tfm.unembed(cfg, rules, params, y)
+
+
+def init_cache(cfg: ModelConfig, rules: ShardingRules, batch: int, max_len: int) -> dict:
+    L = cfg.n_layers
+    return {
+        "c_kv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+        "k_rope": jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), cfg.dtype),
+    }
+
+
+def prefill(cfg, rules, params, tokens, frontend_embeds=None, max_len=None):
+    x, positions, caches = _hidden_full(
+        cfg, rules, params, tokens, frontend_embeds, collect_cache=True
+    )
+    ckv = jnp.concatenate([c[0] for c in caches], axis=0)  # (L,B,S,kv_lora)
+    krope = jnp.concatenate([c[1] for c in caches], axis=0)
+    S = tokens.shape[1] if frontend_embeds is None else x.shape[1]
+    max_len = max_len or S
+    pad = max_len - x.shape[1]
+    if pad > 0:
+        ckv = jnp.pad(ckv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        krope = jnp.pad(krope, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = tfm.unembed(cfg, rules, params, h)
+    return logits, {"c_kv": ckv.astype(cfg.dtype), "k_rope": krope.astype(cfg.dtype)}
+
+
+def decode_step(cfg, rules, params, token, cache, cur_len):
+    x = tfm.embed_tokens(cfg, rules, params, token)
+    nd = cfg.dense_layers
+
+    def dense_body(x, lp_kv):
+        lp, ckv, krope = lp_kv
+        a, (ckv, krope) = mla_decode(
+            cfg, rules, lp["attn"], rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            ckv, krope, cur_len)
+        x = x + a
+        x = x + swiglu(rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
+                       lp["mlp"]["gate"], lp["mlp"]["up"], lp["mlp"]["down"], rules)
+        return x, (ckv, krope)
+
+    def moe_body(x, lp_kv):
+        lp, ckv, krope = lp_kv
+        a, (ckv, krope) = mla_decode(
+            cfg, rules, lp["attn"], rms_norm(x, lp["attn_norm"], cfg.norm_eps),
+            ckv, krope, cur_len)
+        x = x + a
+        x = x + moe_mod.moe_ffn(cfg, rules, lp["moe"],
+                                rms_norm(x, lp["mlp_norm"], cfg.norm_eps))
+        return x, (ckv, krope)
+
+    new_ckv, new_krope = [], []
+    if nd:
+        x, (ckv_d, kr_d) = jax.lax.scan(
+            dense_body, x, (params["dense_layers"], cache["c_kv"][:nd], cache["k_rope"][:nd]),
+            unroll=cfg.dense_layers if cfg.cost_exact else 1)
+        new_ckv.append(ckv_d)
+        new_krope.append(kr_d)
+    x, (ckv_m, kr_m) = jax.lax.scan(
+        moe_body, x, (params["moe_layers"], cache["c_kv"][nd:], cache["k_rope"][nd:]),
+        unroll=cfg.layer_unroll)
+    new_ckv.append(ckv_m)
+    new_krope.append(kr_m)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = tfm.unembed(cfg, rules, params, x)
+    return logits, {
+        "c_kv": jnp.concatenate(new_ckv, axis=0),
+        "k_rope": jnp.concatenate(new_krope, axis=0),
+    }

@@ -1,0 +1,235 @@
+"""Hybrid / recurrent model assemblies: xlstm-1.3b and zamba2-2.7b.
+
+Both are built from a repeating layer-group period:
+  * xlstm-1.3b : ("M"*7 + "s") x 6  — 7 mLSTM blocks then 1 sLSTM block
+  * zamba2-2.7b: ("m"*5 + "a") x 9  — 5 Mamba2 blocks then the *shared*
+    attention block (one parameter set applied at every 'a' position, per the
+    Zamba2 design; each application keeps its own KV cache)
+
+Layer groups are scanned (outer scan over groups, inner scan over the
+homogeneous prefix) so HLO size stays flat in depth.  Recurrent state is
+O(d_state) per layer, which is why these two archs run the long_500k decode
+shape the full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from . import transformer as tfm
+from .common import ModelConfig, ParamDef, ShardingRules, rms_norm
+
+
+def parse_pattern(cfg: ModelConfig) -> tuple[str, int]:
+    """Return (period, n_groups).  The pattern must be periodic."""
+    pat = cfg.ssm_pattern
+    assert pat and len(pat) == cfg.n_layers, (pat, cfg.n_layers)
+    for plen in range(1, len(pat) + 1):
+        if len(pat) % plen == 0 and pat == pat[:plen] * (len(pat) // plen):
+            return pat[:plen], len(pat) // plen
+    return pat, 1
+
+
+def _inner_kind(period: str) -> str:
+    return period[0]  # 'm' (mamba2) or 'M' (mLSTM)
+
+
+def _outer_kind(period: str) -> str | None:
+    return period[-1] if period[-1] != period[0] else None  # 'a' | 's' | None
+
+
+def _mixer_block_defs(cfg: ModelConfig, kind: str) -> dict:
+    mix = {"m": ssm.mamba2_defs, "M": ssm.mlstm_defs, "s": ssm.slstm_defs}[kind](cfg)
+    return {
+        "norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "mixer": mix,
+    }
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    period, G = parse_pattern(cfg)
+    K = sum(1 for c in period if c == period[0])
+    inner = _inner_kind(period)
+    outer = _outer_kind(period)
+    defs = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02, dtype=cfg.dtype),
+        "inner": tfm.stacked(tfm.stacked(_mixer_block_defs(cfg, inner), K), G),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "head": ParamDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+    if outer == "a":
+        # Zamba2: ONE shared transformer block (not stacked)
+        defs["shared_attn"] = tfm.layer_defs(cfg)
+    elif outer == "s":
+        defs["outer"] = tfm.stacked(_mixer_block_defs(cfg, "s"), G)
+    return defs
+
+
+def _apply_inner_full(cfg, rules, kind, p, x, return_state=False):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    fn = ssm.mamba2_full if kind == "m" else ssm.mlstm_full
+    if return_state:
+        y, st = fn(cfg, rules, p["mixer"], h, return_state=True)
+        return x + y, st
+    return x + fn(cfg, rules, p["mixer"], h), None
+
+
+def _apply_inner_step(cfg, rules, kind, p, x, state):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    fn = ssm.mamba2_step if kind == "m" else ssm.mlstm_step
+    y, st = fn(cfg, rules, p["mixer"], h, state)
+    return x + y, st
+
+
+def _inner_state0(cfg, kind, batch):
+    return (ssm.mamba2_init_state if kind == "m" else ssm.mlstm_init_state)(cfg, batch)
+
+
+# ----------------------------------------------------------------------------
+# forward / prefill / decode
+# ----------------------------------------------------------------------------
+
+
+def forward(cfg, rules, params, tokens, frontend_embeds=None, remat: bool = False,
+            unembed_out: bool = True):
+    period, G = parse_pattern(cfg)
+    inner, outer = _inner_kind(period), _outer_kind(period)
+    x = tfm.embed_tokens(cfg, rules, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def group_body(x, gp):
+        def layer_body(x, lp):
+            x, _ = _apply_inner_full(cfg, rules, inner, lp, x)
+            return x, None
+
+        K = gp["inner"]["norm"].shape[0]
+        x, _ = jax.lax.scan(layer_body, x, gp["inner"],
+                            unroll=K if cfg.cost_exact else 1)
+        if outer == "a":
+            x, _ = tfm.layer_full(cfg, rules, params["shared_attn"], x, positions)
+        elif outer == "s":
+            x = x + ssm.slstm_full(
+                cfg, rules, gp["outer"]["mixer"],
+                rms_norm(x, gp["outer"]["norm"], cfg.norm_eps))
+        return x, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    xs = {"inner": params["inner"]}
+    if outer == "s":
+        xs["outer"] = params["outer"]
+    x, _ = jax.lax.scan(group_body, x, xs, unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not unembed_out:
+        return x
+    return tfm.unembed(cfg, rules, params, x)
+
+
+def init_cache(cfg: ModelConfig, rules: ShardingRules, batch: int, max_len: int) -> dict:
+    period, G = parse_pattern(cfg)
+    K = sum(1 for c in period if c == period[0])
+    inner, outer = _inner_kind(period), _outer_kind(period)
+    st0 = _inner_state0(cfg, inner, batch)
+    cache = {
+        "inner": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G, K) + a.shape).copy(), st0
+        )
+    }
+    if outer == "a":
+        KH, hd = cfg.kv_heads, cfg.hd
+        cache["attn_k"] = jnp.zeros((G, batch, max_len, KH, hd), cfg.dtype)
+        cache["attn_v"] = jnp.zeros((G, batch, max_len, KH, hd), cfg.dtype)
+    elif outer == "s":
+        s0 = ssm.slstm_init_state(cfg, batch)
+        cache["outer"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape).copy(), s0
+        )
+    return cache
+
+
+def prefill(cfg, rules, params, tokens, frontend_embeds=None, max_len=None):
+    period, G = parse_pattern(cfg)
+    inner, outer = _inner_kind(period), _outer_kind(period)
+    x = tfm.embed_tokens(cfg, rules, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def group_body(x, gp):
+        def layer_body(x, lp):
+            x, st = _apply_inner_full(cfg, rules, inner, lp, x, return_state=True)
+            return x, st
+
+        K = gp["inner"]["norm"].shape[0]
+        x, inner_states = jax.lax.scan(layer_body, x, gp["inner"],
+                                       unroll=K if cfg.cost_exact else 1)
+        ys = {"inner": inner_states}
+        if outer == "a":
+            x, (k, v) = tfm.layer_full(cfg, rules, params["shared_attn"], x, positions)
+            pad = max_len - S
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ys["attn_k"] = k.astype(cfg.dtype)
+            ys["attn_v"] = v.astype(cfg.dtype)
+        elif outer == "s":
+            y, st = ssm.slstm_full(
+                cfg, rules, gp["outer"]["mixer"],
+                rms_norm(x, gp["outer"]["norm"], cfg.norm_eps), return_state=True)
+            x = x + y
+            ys["outer"] = st
+        return x, ys
+
+    xs = {"inner": params["inner"]}
+    if outer == "s":
+        xs["outer"] = params["outer"]
+    x, caches = jax.lax.scan(group_body, x, xs, unroll=cfg.layer_unroll)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = tfm.unembed(cfg, rules, params, x)
+    return logits, caches
+
+
+def decode_step(cfg, rules, params, token, cache, cur_len):
+    period, G = parse_pattern(cfg)
+    inner, outer = _inner_kind(period), _outer_kind(period)
+    x = tfm.embed_tokens(cfg, rules, params, token)
+
+    def group_body(x, gp_cache):
+        gp = gp_cache["params"]
+
+        def layer_body(x, lp_st):
+            lp, st = lp_st
+            x, st = _apply_inner_step(cfg, rules, inner, lp, x, st)
+            return x, st
+
+        x, inner_states = jax.lax.scan(
+            layer_body, x, (gp["inner"], gp_cache["inner"]))
+        ys = {"inner": inner_states}
+        if outer == "a":
+            x, (k, v) = tfm.layer_decode(
+                cfg, rules, params["shared_attn"], x,
+                gp_cache["attn_k"], gp_cache["attn_v"], cur_len)
+            ys["attn_k"] = k
+            ys["attn_v"] = v
+        elif outer == "s":
+            y, st = ssm.slstm_step(
+                cfg, rules, gp["outer"]["mixer"],
+                rms_norm(x, gp["outer"]["norm"], cfg.norm_eps), gp_cache["outer"])
+            x = x + y
+            ys["outer"] = st
+        return x, ys
+
+    xs = {"params": {"inner": params["inner"]}, "inner": cache["inner"]}
+    if outer == "s":
+        xs["params"]["outer"] = params["outer"]
+        xs["outer"] = cache["outer"]
+    elif outer == "a":
+        xs["attn_k"] = cache["attn_k"]
+        xs["attn_v"] = cache["attn_v"]
+    x, new_cache = jax.lax.scan(group_body, x, xs, unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tfm.unembed(cfg, rules, params, x), new_cache

@@ -1,0 +1,266 @@
+"""Unified Model interface over the 10 assigned architectures.
+
+`build_model(cfg)` dispatches on family and returns a `Model` whose closures
+cover the whole lifecycle: init / forward / loss (training), prefill /
+decode_step (serving), and `layer_costs` — the analytical per-layer profile
+the PPipe control plane consumes (the TensorRT-profiling stand-in).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.core.types import LayerCost
+
+from . import deepseek, encdec, hybrid, moe, transformer as tfm
+from .common import (
+    ModelConfig,
+    ShardingRules,
+    NO_SHARDING,
+    ce_chunk_of,
+    init_params,
+    param_pspecs,
+    param_shapes,
+)
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    rules: ShardingRules
+    defs: dict
+    _forward: Callable
+    _prefill: Callable
+    _decode: Callable
+    _init_cache: Callable
+    _loss: Callable
+
+    # -- parameters -----------------------------------------------------------
+    def init(self, key) -> dict:
+        return init_params(self.defs, key)
+
+    def shapes(self, mesh=None):
+        return param_shapes(self.defs, self.rules if mesh is not None else None, mesh)
+
+    def pspecs(self):
+        return param_pspecs(self.defs, self.rules)
+
+    # -- compute --------------------------------------------------------------
+    def forward(self, params, batch: dict, remat: bool = False):
+        return self._forward(params, batch, remat)
+
+    def loss(self, params, batch: dict, remat: bool = False):
+        return self._loss(params, batch, remat)
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return self._init_cache(batch_size, max_len)
+
+    def prefill(self, params, batch: dict, max_len: int | None = None):
+        return self._prefill(params, batch, max_len)
+
+    def decode_step(self, params, token, cache, cur_len):
+        return self._decode(params, token, cache, cur_len)
+
+    # -- control-plane profile ------------------------------------------------
+    def layer_costs(self, seq: int) -> list[LayerCost]:
+        return layer_costs(self.cfg, seq)
+
+
+def _ce_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Masked CE over the true (un-padded) vocabulary, mean over tokens."""
+    Vp = logits.shape[-1]
+    mask = jnp.arange(Vp) < cfg.vocab
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _ce_from_hidden(cfg: ModelConfig, params: dict, hidden: jax.Array,
+                    labels: jax.Array) -> jax.Array:
+    """Chunked cross-entropy computed from final hidden states.
+
+    The (B, S, V) logits tensor is the single largest training temporary
+    (2.5 GB/device at 4k x 152k vocab in f32); computing logits chunk-by-chunk
+    inside a scan bounds it to (B, chunk, V).  Labels < 0 are masked out."""
+    w = params["head"] if "head" in params else params["embed"].T
+    B, S, d = hidden.shape
+    chunk = ce_chunk_of(cfg, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nch = (S + pad) // chunk
+    hs = hidden.reshape(B, nch, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nch, chunk).transpose(1, 0, 2)
+    vmask = jnp.arange(w.shape[-1]) < cfg.vocab
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xc, lc = xs
+        logits = jnp.einsum("bcd,dv->bcv", xc, w).astype(jnp.float32)
+        logits = jnp.where(vmask, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((logz - gold) * valid), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def build_model(cfg: ModelConfig, rules: ShardingRules | None = None) -> Model:
+    rules = rules if rules is not None else NO_SHARDING
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        mod = tfm
+    elif fam == "moe":
+        mod = deepseek if cfg.mla else moe
+    elif fam in ("ssm", "hybrid"):
+        mod = hybrid
+    elif fam == "audio":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    def fwd(params, batch, remat):
+        if fam == "audio":
+            return mod.forward(cfg, rules, params, batch["tokens"], batch["frames"],
+                               remat=remat)
+        fe = batch.get("patches")
+        return mod.forward(cfg, rules, params, batch["tokens"], fe, remat=remat)
+
+    def fwd_hidden(params, batch, remat):
+        if fam == "audio":
+            return mod.forward(cfg, rules, params, batch["tokens"], batch["frames"],
+                               remat=remat, unembed_out=False)
+        return mod.forward(cfg, rules, params, batch["tokens"], batch.get("patches"),
+                           remat=remat, unembed_out=False)
+
+    def loss(params, batch, remat):
+        tokens = batch["tokens"]
+        if fam == "moe" and cfg.mla and cfg.mtp and "mtp" in params:
+            h, y = deepseek.forward_with_mtp(
+                cfg, rules, params, tokens, remat=remat, unembed_out=False)
+            main = _ce_from_hidden(cfg, params, h[:, :-1], tokens[:, 1:])
+            # MTP predicts token t+2 from positions [0, S-1)
+            mtp = _ce_from_hidden(cfg, params, y[:, :-1], tokens[:, 2:])
+            return main + 0.3 * mtp
+        hidden = fwd_hidden(params, batch, remat)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = tokens[:, 1:]
+            hidden = hidden[:, batch_text_offset(cfg) : -1]
+        return _ce_from_hidden(cfg, params, hidden, labels)
+
+    def prefill(params, batch, max_len):
+        if fam == "audio":
+            return mod.prefill(cfg, rules, params, batch["frames"], max_len=max_len)
+        fe = batch.get("patches")
+        return mod.prefill(cfg, rules, params, batch["tokens"], fe, max_len=max_len)
+
+    def init_cache(batch_size, max_len):
+        return mod.init_cache(cfg, rules, batch_size, max_len)
+
+    def decode(params, token, cache, cur_len):
+        return mod.decode_step(cfg, rules, params, token, cache, cur_len)
+
+    return Model(
+        cfg=cfg, rules=rules, defs=mod.model_defs(cfg),
+        _forward=fwd, _prefill=prefill, _decode=decode,
+        _init_cache=init_cache, _loss=loss,
+    )
+
+
+def batch_text_offset(cfg: ModelConfig) -> int:
+    """Frontend tokens prepended before text (VLM patches)."""
+    return cfg.frontend_tokens if cfg.family == "vlm" else 0
+
+
+# ----------------------------------------------------------------------------
+# Analytical per-layer costs for the PPipe control plane
+# ----------------------------------------------------------------------------
+
+
+def layer_costs(cfg: ModelConfig, seq: int) -> list[LayerCost]:
+    """Per-layer (flops, bytes, boundary size) at batch 1 for pre-partitioning.
+
+    One entry per schedulable unit: frontend/embedding, each
+    sequence-mixing+FFN layer, final norm + head.
+    """
+    d, dff, V = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    out: list[LayerCost] = []
+    out.append(cm.embed_cost(seq, d, V))
+
+    def attn(name="attn", kv_len=None):
+        hd = cfg.hd
+        return cm.attention_cost(seq, d, cfg.n_heads, cfg.kv_heads, hd,
+                                 kv_len=kv_len, name=name, qkv_bias=cfg.qkv_bias)
+
+    def mla(name="mla"):
+        # projections via low-rank paths + attention over (nope+rope) dims
+        H = cfg.n_heads
+        e = cfg.qk_nope_dim + cfg.qk_rope_dim
+        proj = 2 * seq * (d * cfg.q_lora_rank + cfg.q_lora_rank * H * e
+                          + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                          + cfg.kv_lora_rank * H * (cfg.qk_nope_dim + cfg.v_head_dim)
+                          + H * cfg.v_head_dim * d)
+        attn_f = 2 * seq * seq * H * (e + cfg.v_head_dim)
+        w = (d * cfg.q_lora_rank + cfg.q_lora_rank * H * e
+             + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+             + cfg.kv_lora_rank * H * (cfg.qk_nope_dim + cfg.v_head_dim)
+             + H * cfg.v_head_dim * d)
+        act = (6 * seq * d + 2 * seq * H * e) * cm.BYTES
+        return LayerCost(name, flops=proj + attn_f, act_bytes=act,
+                         weight_bytes=w * cm.BYTES, out_bytes=seq * d * cm.BYTES)
+
+    if cfg.family in ("dense", "vlm"):
+        for i in range(cfg.n_layers):
+            out.append(cm.layer_sequence_cost(
+                f"layer{i}", [attn(), cm.mlp_cost(seq, d, dff)]))
+    elif cfg.family == "moe" and not cfg.mla:
+        for i in range(cfg.n_layers):
+            out.append(cm.layer_sequence_cost(
+                f"layer{i}",
+                [attn(), cm.moe_cost(seq, d, cfg.moe_d_ff or dff, cfg.n_experts,
+                                     cfg.top_k, cfg.n_shared_experts)]))
+    elif cfg.family == "moe" and cfg.mla:
+        for i in range(cfg.n_layers):
+            if i < cfg.dense_layers:
+                ffn = cm.mlp_cost(seq, d, deepseek.dense_ff_dim(cfg))
+            else:
+                ffn = cm.moe_cost(seq, d, cfg.moe_d_ff or dff, cfg.n_experts,
+                                  cfg.top_k, cfg.n_shared_experts)
+            out.append(cm.layer_sequence_cost(f"layer{i}", [mla(), ffn]))
+    elif cfg.family in ("ssm", "hybrid"):
+        for i, code in enumerate(cfg.ssm_pattern):
+            if code == "m":
+                out.append(cm.mamba2_cost(seq, d, cfg.d_state, cfg.ssm_expand,
+                                          name=f"mamba{i}"))
+            elif code == "M":
+                out.append(cm.xlstm_cost(seq, d, cfg.n_heads, name=f"mlstm{i}"))
+            elif code == "s":
+                out.append(cm.xlstm_cost(seq, d, cfg.n_heads, name=f"slstm{i}"))
+            elif code == "a":
+                out.append(cm.layer_sequence_cost(
+                    f"attn{i}", [attn(), cm.mlp_cost(seq, d, dff)]))
+    elif cfg.family == "audio":
+        for i in range(cfg.encoder_layers):
+            out.append(cm.layer_sequence_cost(
+                f"enc{i}", [attn(name="enc_attn"), cm.mlp_cost(seq, d, dff)]))
+        for i in range(cfg.n_layers):
+            out.append(cm.layer_sequence_cost(
+                f"dec{i}", [attn(), attn(name="cross"), cm.mlp_cost(seq, d, dff)]))
+    else:
+        raise ValueError(cfg.family)
+
+    out.append(cm.head_cost(seq, d, V))
+    return out

@@ -1,0 +1,229 @@
+"""Mixture-of-Experts FFN + MoE transformer (llama4-maverick-400b-a17b).
+
+Dispatch is sort-based with per-expert capacity (megablocks-style) rather than
+one-hot einsum dispatch: at 256 experts x 64k tokens a dispatch one-hot is
+O(T*E*C) and unbuildable, while argsort + scatter keeps memory linear in
+tokens.  Experts are sharded over the `model` mesh axis (expert parallelism);
+the (E, C, d) dispatch buffer carries the same sharding so GSPMD lowers the
+token exchange to all-to-all/all-gather collectives (counted in the roofline).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .common import ModelConfig, ParamDef, ShardingRules, rms_norm, swiglu
+
+
+def moe_ffn_defs(cfg: ModelConfig) -> dict:
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = cfg.dtype
+    defs = {
+        "router": ParamDef((d, E), ("embed", None), scale=0.02, dtype=jnp.float32),
+        "gate": ParamDef((E, d, ff), ("experts", "embed", "expert_ff"), dtype=dt),
+        "up": ParamDef((E, d, ff), ("experts", "embed", "expert_ff"), dtype=dt),
+        "down": ParamDef((E, ff, d), ("experts", "expert_ff", "embed"), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        defs["shared"] = {
+            "gate": ParamDef((d, sff), ("embed", "ffn"), dtype=dt),
+            "up": ParamDef((d, sff), ("embed", "ffn"), dtype=dt),
+            "down": ParamDef((sff, d), ("ffn", "embed"), dtype=dt),
+        }
+    return defs
+
+
+def _dispatch_compute(cfg: ModelConfig, p: dict, xf: jax.Array) -> jax.Array:
+    """Sort-dispatch + expert FFN + gather-combine on one token group.
+
+    Pure (no sharding constraints) so it can be vmapped over DP-local groups
+    (`moe_dispatch_groups`), which keeps the argsort/scatter/gather chain
+    *local to each data shard* — without grouping, the global argsort forces
+    GSPMD to replicate the whole dispatch on every device (see EXPERIMENTS.md
+    section Perf, deepseek iterations)."""
+    N, d = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    scores = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(scores, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)  # (N, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    cap = max(8, int(math.ceil(N * k / E * cfg.capacity_factor)))
+    flat_ids = ids.reshape(-1)  # (N*k,)
+    sort_idx = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[sort_idx]
+    group_start = jnp.searchsorted(sorted_ids, jnp.arange(E), side="left")
+    pos_in_grp = jnp.arange(N * k) - group_start[sorted_ids]
+    token_idx = sort_idx // k
+    valid = pos_in_grp < cap
+
+    buf = jnp.zeros((E, cap, d), xf.dtype)
+    buf = buf.at[sorted_ids, jnp.where(valid, pos_in_grp, cap)].set(
+        xf[token_idx], mode="drop"
+    )
+
+    # ---- expert computation (E-sharded einsums) -----------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])
+
+    # ---- gather back + weighted combine -------------------------------------
+    safe_pos = jnp.minimum(pos_in_grp, cap - 1)
+    routed = out_buf[sorted_ids, safe_pos]  # (N*k, d)
+    routed = jnp.where(valid[:, None], routed, 0)
+    w = weights.reshape(-1)[sort_idx].astype(routed.dtype)
+    routed = routed * w[:, None]
+    # Unsort via the inverse permutation + reduce over k — a pure gather
+    # instead of a scatter-add into a dense (N, d) zeros buffer (GSPMD lowers
+    # that scatter to a full all-reduce of f32 (N, d) per layer).
+    inv = jnp.argsort(sort_idx)
+    return routed[inv].reshape(N, k, d).sum(axis=1)
+
+
+def moe_ffn(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+
+    if cfg.moe_weight_gather:
+        # Weight-gathered FSDP: constrain expert weights to expert-only
+        # sharding at the point of use; GSPMD all-gathers the (smaller)
+        # weights over DP once per layer instead of partial-summing the
+        # (larger) expert outputs over the DP-sharded FFN dim.
+        p = dict(
+            p,
+            gate=rules.constrain(p["gate"], "experts", None, None),
+            up=rules.constrain(p["up"], "experts", None, None),
+            down=rules.constrain(p["down"], "experts", None, None),
+        )
+    G = cfg.moe_dispatch_groups
+    if G > 1 and N % G == 0 and N >= 2 * G:
+        xg = rules.constrain(xf.reshape(G, N // G, d), "batch", None, None)
+        combined = jax.vmap(lambda xloc: _dispatch_compute(cfg, p, xloc))(xg)
+        combined = rules.constrain(combined, "batch", None, None).reshape(N, d)
+    else:
+        combined = _dispatch_compute(cfg, p, xf)
+
+    out = combined.reshape(B, T, d)
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + swiglu(x, sp["gate"], sp["up"], sp["down"], rules)
+    return rules.constrain(out, "batch", None, None)
+
+
+def aux_load_balance_loss(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (training)."""
+    B, T, d = x.shape
+    xf = x.reshape(B * T, d)
+    probs = jax.nn.softmax(
+        jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"]), axis=-1
+    )
+    ids = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)
+
+
+# ----------------------------------------------------------------------------
+# MoE transformer (llama4-style: GQA attention + MoE FFN every layer)
+# ----------------------------------------------------------------------------
+
+
+def layer_defs(cfg: ModelConfig) -> dict:
+    return {
+        "attn_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "attn": tfm.attn_defs(cfg),
+        "mlp_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "moe": moe_ffn_defs(cfg),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02, dtype=cfg.dtype),
+        "layers": tfm.stacked(layer_defs(cfg), cfg.n_layers),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones", dtype=cfg.dtype),
+        "head": ParamDef((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), dtype=cfg.dtype),
+    }
+
+
+def _layer_full(cfg, rules, p, x, positions):
+    a, kv = tfm.attn_full(cfg, rules, p["attn"],
+                          rms_norm(x, p["attn_norm"], cfg.norm_eps), positions)
+    x = x + a
+    x = x + moe_ffn(cfg, rules, p["moe"], rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    return x, kv
+
+
+def _layer_decode(cfg, rules, p, x, k_c, v_c, cur_len):
+    a, (k_c, v_c) = tfm.attn_decode(
+        cfg, rules, p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps), k_c, v_c, cur_len
+    )
+    x = x + a
+    x = x + moe_ffn(cfg, rules, p["moe"], rms_norm(x, p["mlp_norm"], cfg.norm_eps))
+    return x, (k_c, v_c)
+
+
+def forward(cfg, rules, params, tokens, frontend_embeds=None, remat: bool = False,
+            unembed_out: bool = True):
+    x = tfm.embed_tokens(cfg, rules, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, _ = _layer_full(cfg, rules, lp, x, positions)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"], unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if not unembed_out:
+        return x
+    return tfm.unembed(cfg, rules, params, x)
+
+
+init_cache = tfm.init_cache
+
+
+def prefill(cfg, rules, params, tokens, frontend_embeds=None, max_len=None):
+    x = tfm.embed_tokens(cfg, rules, params, tokens, frontend_embeds)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, kv = _layer_full(cfg, rules, lp, x, positions)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"], unroll=cfg.layer_unroll)
+    pad = max_len - S
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return tfm.unembed(cfg, rules, params, x), {"k": ks.astype(cfg.dtype), "v": vs.astype(cfg.dtype)}
+
+
+def decode_step(cfg, rules, params, token, cache, cur_len):
+    x = tfm.embed_tokens(cfg, rules, params, token)
+
+    def body(x, lp_kv):
+        lp, k_c, v_c = lp_kv
+        x, (k_c, v_c) = _layer_decode(cfg, rules, lp, x, k_c, v_c, cur_len)
+        return x, (k_c, v_c)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                               unroll=cfg.layer_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return tfm.unembed(cfg, rules, params, x), {"k": ks, "v": vs}

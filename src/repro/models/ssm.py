@@ -1,0 +1,390 @@
+"""State-space sequence mixers: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM) cells.
+
+TPU adaptation (DESIGN.md section 6): GPU SSM kernels use warp-level scans;
+the TPU-native formulation is *chunked*: O(Q^2) dense matmuls within chunks
+(MXU work) + a tiny sequential inter-chunk state recurrence.  Both Mamba2's
+SSD and the mLSTM are instances of linear attention with per-step decay, so a
+single `chunked_linear_attention` routine serves both (and is the pure-jnp
+oracle for the `ssd_scan` Pallas kernel).
+
+All recurrent state is O(d_state) per layer — why these archs run the
+long_500k decode shape that full-attention models skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamDef, ShardingRules, rms_norm, ssm_chunk_of
+
+CLIP = 30.0
+
+
+# ----------------------------------------------------------------------------
+# Chunked linear attention with decay (shared by SSD and mLSTM)
+# ----------------------------------------------------------------------------
+
+
+def chunked_linear_attention(
+    q: jax.Array,  # (B, T, NH, DK)
+    k: jax.Array,  # (B, T, NH, DK)
+    v: jax.Array,  # (B, T, NH, DV)
+    log_g: jax.Array,  # (B, T, NH) per-step log decay (<= 0)
+    log_i: jax.Array | None = None,  # (B, T, NH) per-step log input gate
+    init_state: jax.Array | None = None,  # (B, NH, DK, DV)
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """y_t = q_t . sum_{s<=t} exp(sum_{u in (s,t]} log_g_u + log_i_s) k_s v_s^T.
+
+    Returns (y, final_state).  All accumulation in float32.
+    """
+    B, T, NH, DK = q.shape
+    DV = v.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, zq), jnp.pad(k, zq), jnp.pad(v, zq)
+        log_g = jnp.pad(log_g, ((0, 0), (0, pad), (0, 0)))
+        if log_i is not None:
+            log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-CLIP)
+    NC = (T + pad) // Q
+
+    def rs(x, extra):
+        return x.reshape(B, NC, Q, *extra).transpose(1, 0, 2, *range(3, 3 + len(extra)))
+
+    qs = rs(q.astype(jnp.float32), (NH, DK))
+    ks = rs(k.astype(jnp.float32), (NH, DK))
+    vs = rs(v.astype(jnp.float32), (NH, DV))
+    gs = rs(log_g.astype(jnp.float32), (NH,))
+    is_ = rs(log_i.astype(jnp.float32), (NH,)) if log_i is not None else None
+
+    S0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, NH, DK, DV), jnp.float32)
+    )
+
+    def chunk_step(S, blk):
+        qb, kb, vb, gb, ib = blk
+        cum = jnp.cumsum(gb, axis=1)  # (B, Q, NH): sum of log_g over (0, t]
+        total = cum[:, -1]  # (B, NH)
+        # intra-chunk: D[t, s] = exp(cum_t - cum_s + log_i_s) for s <= t
+        li = ib if ib is not None else jnp.zeros_like(cum)
+        dmat = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        dmat = jnp.where(tri[None, :, :, None], jnp.clip(dmat, -CLIP, CLIP), -jnp.inf)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * jnp.exp(dmat)
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, vb)
+        # inter-chunk: decay from chunk start to t is exp(cum_t)
+        y_inter = jnp.einsum(
+            "bthd,bhdv->bthv", qb * jnp.exp(jnp.clip(cum, -CLIP, CLIP))[..., None], S
+        )
+        # new state: S' = exp(total) S + sum_s exp(total - cum_s + log_i_s) k_s v_s
+        w = jnp.exp(jnp.clip(total[:, None] - cum + li, -CLIP, CLIP))  # (B, Q, NH)
+        S_local = jnp.einsum("bshd,bsh,bshv->bhdv", kb, w, vb)
+        S_new = jnp.exp(jnp.clip(total, -CLIP, CLIP))[:, :, None, None] * S + S_local
+        return S_new, y_intra + y_inter
+
+    blks = (qs, ks, vs, gs, is_) if is_ is not None else (qs, ks, vs, gs, None)
+    if is_ is None:
+        S_fin, ys = jax.lax.scan(
+            lambda S, b: chunk_step(S, (*b, None)), S0, (qs, ks, vs, gs)
+        )
+    else:
+        S_fin, ys = jax.lax.scan(chunk_step, S0, (qs, ks, vs, gs, is_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, NC * Q, NH, DV)[:, :T]
+    return y.astype(v.dtype), S_fin
+
+
+def linear_attention_step(
+    q: jax.Array,  # (B, NH, DK)
+    k: jax.Array,
+    v: jax.Array,  # (B, NH, DV)
+    log_g: jax.Array,  # (B, NH)
+    state: jax.Array,  # (B, NH, DK, DV)
+    log_i: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the same recurrence."""
+    g = jnp.exp(jnp.clip(log_g.astype(jnp.float32), -CLIP, CLIP))
+    i = (
+        jnp.exp(jnp.clip(log_i.astype(jnp.float32), -CLIP, CLIP))
+        if log_i is not None
+        else jnp.ones_like(g)
+    )
+    kv = jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32) * i[..., None],
+                    v.astype(jnp.float32))
+    state = g[..., None, None] * state + kv
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ----------------------------------------------------------------------------
+# Mamba2 mixer
+# ----------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    ds = cfg.d_state
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    return di, ds, hd, nh
+
+
+def mamba2_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, ds, hd, nh = mamba2_dims(cfg)
+    dt = cfg.dtype
+    conv_dim = di + 2 * ds
+    return {
+        "in_proj": ParamDef((d, 2 * di + 2 * ds + nh), ("embed", "d_inner"), dtype=dt),
+        "conv_w": ParamDef((4, conv_dim), (None, "d_inner"), scale=0.5, dtype=dt),
+        "conv_b": ParamDef((conv_dim,), ("d_inner",), init="zeros", dtype=dt),
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "D": ParamDef((nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm": ParamDef((di,), ("d_inner",), init="ones", dtype=dt),
+        "out_proj": ParamDef((di, d), ("d_inner", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xBC: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1]] * w[i] for i in range(K)
+    )
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    di, ds, hd, nh = mamba2_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, di + 2 * ds), cfg.dtype),
+        "ssm": jnp.zeros((batch, nh, ds, hd), jnp.float32),
+    }
+
+
+def mamba2_full(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence Mamba2. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    di, ds, hd, nh = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + di + 2 * ds]
+    dt_raw = zxbcdt[..., di + di + 2 * ds :]  # (B, T, nh)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, T, nh, hd)
+    Bm = xBC[..., di : di + ds]
+    Cm = xBC[..., di + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_g = dt * A  # <= 0
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, nh, ds))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, T, nh, ds))
+    v = xs * dt[..., None].astype(xs.dtype)
+    y, S = chunked_linear_attention(q, k, v, log_g, chunk=ssm_chunk_of(cfg, T))
+    y = y + xs * p["D"].astype(xs.dtype)[:, None]
+    y = y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    if return_state:
+        T3 = min(3, T)
+        cs = jnp.zeros((B, 3, di + 2 * ds), x.dtype)
+        raw = zxbcdt[..., di : di + di + 2 * ds]
+        cs = jax.lax.dynamic_update_slice_in_dim(cs, raw[:, -T3:], 3 - T3, axis=1)
+        return out, {"conv": cs, "ssm": S}
+    return out
+
+
+def mamba2_step(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+                state: dict):
+    """Single-token Mamba2. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, ds, hd, nh = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"])[:, 0]
+    z = zxbcdt[..., :di]
+    xBC_new = zxbcdt[..., di : di + di + 2 * ds]
+    dt_raw = zxbcdt[..., di + di + 2 * ds :]
+    conv = jnp.concatenate([state["conv"], xBC_new[:, None]], axis=1)  # (B,4,C)
+    xBC = jax.nn.silu(
+        (jnp.einsum("bkc,kc->bc", conv, p["conv_w"]) + p["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs = xBC[..., :di].reshape(B, nh, hd)
+    Bm = xBC[..., di : di + ds]
+    Cm = xBC[..., di + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_g = dt * A
+    k = jnp.broadcast_to(Bm[:, None, :], (B, nh, ds))
+    q = jnp.broadcast_to(Cm[:, None, :], (B, nh, ds))
+    v = xs * dt[..., None].astype(xs.dtype)
+    y, S = linear_attention_step(q, k, v, log_g, state["ssm"])
+    y = y + xs * p["D"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z[:, None].astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, {"conv": conv[:, 1:], "ssm": S}
+
+
+# ----------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ----------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, hd = mlstm_dims(cfg)
+    dt = cfg.dtype
+    return {
+        "up": ParamDef((d, 2 * di), ("embed", "d_inner"), dtype=dt),
+        "wq": ParamDef((di, di), ("d_inner", None), dtype=dt),
+        "wk": ParamDef((di, di), ("d_inner", None), dtype=dt),
+        "wv": ParamDef((di, di), ("d_inner", None), dtype=dt),
+        "wif": ParamDef((di, 2 * nh), ("d_inner", None), scale=0.02, dtype=dt),
+        "b_if": ParamDef((2 * nh,), (None,), init="zeros", dtype=jnp.float32),
+        "norm": ParamDef((di,), ("d_inner",), init="ones", dtype=dt),
+        "down": ParamDef((di, d), ("d_inner", "embed"), dtype=dt),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    di, nh, hd = mlstm_dims(cfg)
+    return {"ssm": jnp.zeros((batch, nh, hd, hd + 1), jnp.float32)}
+
+
+def _mlstm_qkvif(cfg, p, u):
+    B, T, di = u.shape
+    _, nh, hd = mlstm_dims(cfg)
+    q = jnp.einsum("bti,ij->btj", u, p["wq"]).reshape(B, T, nh, hd) / (hd ** 0.5)
+    k = jnp.einsum("bti,ij->btj", u, p["wk"]).reshape(B, T, nh, hd)
+    v = jnp.einsum("bti,ij->btj", u, p["wv"]).reshape(B, T, nh, hd)
+    if_ = jnp.einsum("bti,ij->btj", u, p["wif"]).astype(jnp.float32) + p["b_if"]
+    log_i = jnp.clip(if_[..., :nh], -CLIP, 10.0)
+    log_f = jax.nn.log_sigmoid(if_[..., nh:] + 4.0)  # forget-gate bias init ~1
+    return q, k, v, log_i, log_f
+
+
+def mlstm_full(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+               return_state: bool = False):
+    B, T, d = x.shape
+    di, nh, hd = mlstm_dims(cfg)
+    ug = jnp.einsum("btd,de->bte", x, p["up"])
+    u, z = ug[..., :di], ug[..., di:]
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, u)
+    # normalizer: append a ones column to v; state last column accumulates n
+    v_aug = jnp.concatenate([v, jnp.ones((B, T, nh, 1), v.dtype)], axis=-1)
+    y_aug, S = chunked_linear_attention(q, k, v_aug, log_f, log_i,
+                                        chunk=ssm_chunk_of(cfg, T))
+    y, n = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, T, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["down"])
+    if return_state:
+        return out, {"ssm": S}
+    return out
+
+
+def mlstm_step(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+               state: dict):
+    B = x.shape[0]
+    di, nh, hd = mlstm_dims(cfg)
+    ug = jnp.einsum("btd,de->bte", x, p["up"])[:, 0]
+    u, z = ug[..., :di], ug[..., di:]
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, u[:, None])
+    v_aug = jnp.concatenate([v, jnp.ones((B, 1, nh, 1), v.dtype)], axis=-1)
+    y_aug, S = linear_attention_step(
+        q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], state["ssm"], log_i[:, 0]
+    )
+    y, n = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(
+        z[:, None].astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["down"])
+    return out, {"ssm": S}
+
+
+# ----------------------------------------------------------------------------
+# sLSTM (scalar-memory cell with recurrent gates; strictly sequential)
+# ----------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dt = cfg.dtype
+    return {
+        "w": ParamDef((d, 4 * d), ("embed", "d_inner"), dtype=dt),
+        "r": ParamDef((nh, hd, 4 * hd), (None, None, None), scale=0.02, dtype=dt),
+        "b": ParamDef((4 * d,), ("d_inner",), init="zeros", dtype=jnp.float32),
+        "norm": ParamDef((d,), ("embed",), init="ones", dtype=dt),
+        "out": ParamDef((d, d), ("embed", None), dtype=dt),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, nh, hd), -CLIP)}
+
+
+def _slstm_cell(cfg, p, wx_t, st):
+    """One sLSTM step. wx_t: (B, 4*d) precomputed input contribution."""
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    B = wx_t.shape[0]
+    rh = jnp.einsum("bnh,nhk->bnk", st["h"].astype(p["r"].dtype), p["r"])  # (B,nh,4hd)
+    gates = wx_t.reshape(B, nh, 4 * hd).astype(jnp.float32) + rh.astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw + 4.0)
+    m_new = jnp.maximum(log_f + st["m"], i_raw)
+    i = jnp.exp(jnp.clip(i_raw - m_new, -CLIP, CLIP))
+    f = jnp.exp(jnp.clip(log_f + st["m"] - m_new, -CLIP, CLIP))
+    c = f * st["c"] + i * jnp.tanh(z_raw)
+    n = f * st["n"] + i
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_full(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+               return_state: bool = False, init_state: dict | None = None):
+    B, T, d = x.shape
+    wx = jnp.einsum("btd,dk->btk", x, p["w"]) + p["b"].astype(x.dtype)
+    st0 = init_state or slstm_init_state(cfg, B)
+
+    def step(st, wx_t):
+        st = _slstm_cell(cfg, p, wx_t, st)
+        return st, st["h"]
+
+    st, hs = jax.lax.scan(step, st0, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    out = jnp.einsum("btd,dk->btk", rms_norm(y, p["norm"], cfg.norm_eps), p["out"])
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_step(cfg: ModelConfig, rules: ShardingRules, p: dict, x: jax.Array,
+               state: dict):
+    B = x.shape[0]
+    wx = jnp.einsum("btd,dk->btk", x, p["w"])[:, 0] + p["b"].astype(x.dtype)
+    st = _slstm_cell(cfg, p, wx, state)
+    y = st["h"].reshape(B, 1, -1).astype(x.dtype)
+    out = jnp.einsum("btd,dk->btk", rms_norm(y, p["norm"], cfg.norm_eps), p["out"])
+    return out, st

@@ -1,0 +1,1 @@
+from .engine import ServingEngine, StageExecutor, split_stages  # noqa: F401

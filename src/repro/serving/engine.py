@@ -1,0 +1,157 @@
+"""Serving engine: executes MILP plans with real JAX stage computation.
+
+This is the prototype data plane (paper section 6): the discrete-event
+simulator models large clusters; this engine actually *runs* the pooled
+pipelines on local devices, demonstrating that a PipelinePlan is executable —
+partitions are materialized as jitted per-stage functions over block ranges,
+boundary activations are quantized (boundary_quant kernel) before transfer,
+and the reservation scheduler drives dispatch in wall-clock time.
+
+Stage splitting maps a model's block graph onto partitions:
+  block 0           = embedding (+ modality frontend)
+  blocks 1..L       = sequence layers
+  block L+1         = final norm + head
+A stage spanning blocks [i, j) embeds iff i == 0 and unembeds iff j == n.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import PipelinePlan
+from repro.core.types import Request
+from repro.kernels.boundary_quant import ops as bq_ops
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, NO_SHARDING, rms_norm
+from repro.models.model_zoo import build_model
+
+
+def split_stages(cfg: ModelConfig, block_ranges: list[tuple[int, int]],
+                 layer_block_map: list[tuple[int, int]]):
+    """Build per-stage apply functions for a dense-family model.
+
+    `layer_block_map[b] = (layer_start, layer_end)` for each pre-partitioned
+    block b (0 = embed, last = head).  Each stage closure takes (params,
+    carry) where carry is tokens for stage 0 and hidden states afterwards.
+    """
+    model = build_model(cfg)
+    n_blocks = len(layer_block_map)
+
+    def make_stage(i: int, j: int) -> Callable:
+        lo = layer_block_map[i][0]
+        hi = layer_block_map[j - 1][1]
+
+        def stage(params: dict, carry):
+            rules = NO_SHARDING
+            if i == 0:
+                x = tfm.embed_tokens(cfg, rules, params, carry)
+                lstart, lend = 0, hi
+            else:
+                x = carry
+                lstart, lend = lo, hi
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            lslice = jax.tree.map(lambda a: a[lstart:lend], params["layers"])
+
+            def body(x, lp):
+                x, _ = tfm.layer_full(cfg, rules, lp, x, positions)
+                return x, None
+
+            x, _ = jax.lax.scan(body, x, lslice)
+            if j == n_blocks:
+                x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+                return tfm.unembed(cfg, rules, params, x)
+            return x
+
+        return stage
+
+    return model, [make_stage(i, j) for i, j in block_ranges]
+
+
+@dataclass
+class StageExecutor:
+    """One pool member: a jitted stage function bound to its partition params."""
+
+    stage_fn: Callable
+    params: dict
+    quantize_boundary: bool = True
+    _jitted: Callable | None = None
+
+    def __post_init__(self):
+        self._jitted = jax.jit(self.stage_fn)
+
+    def __call__(self, carry):
+        out = self._jitted(self.params, carry)
+        return out
+
+    def transfer(self, x: jax.Array) -> jax.Array:
+        """Boundary transfer: int8-quantize, (move), dequantize — the paper's
+        fp32->fp16 trick, one step further (section 6 / DESIGN.md)."""
+        if not self.quantize_boundary or x.dtype == jnp.int32:
+            return x
+        q, scale = bq_ops.quantize(x)
+        return bq_ops.dequantize(q, scale, x.dtype)
+
+
+@dataclass
+class ServingEngine:
+    """Executes batches through the staged pipeline; used by the e2e example
+    and integration tests (single-host: pools are co-resident executors)."""
+
+    cfg: ModelConfig
+    pipeline: PipelinePlan
+    executors: list[list[StageExecutor]]  # [stage][pool member]
+    rr: list[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.rr = [0] * len(self.executors)
+
+    def infer(self, tokens: jax.Array) -> jax.Array:
+        """Run one batch through the pipeline (round-robin pool members)."""
+        carry: Any = tokens
+        for si, pool in enumerate(self.executors):
+            member = pool[self.rr[si] % len(pool)]
+            self.rr[si] += 1
+            if si > 0:
+                carry = member.transfer(carry)
+            carry = member(carry)
+        return carry
+
+    def serve(self, requests: list[Request], batch_size: int | None = None,
+              seq_len: int = 128) -> dict:
+        """Batch + run requests; returns latency stats (wall-clock)."""
+        bs = batch_size or self.pipeline.batch_size
+        lat = []
+        done = 0
+        for i in range(0, len(requests), bs):
+            chunk = requests[i : i + bs]
+            tokens = jnp.ones((len(chunk), seq_len), jnp.int32)
+            t0 = time.perf_counter()
+            out = self.infer(tokens)
+            jax.block_until_ready(out)
+            lat.append(time.perf_counter() - t0)
+            done += len(chunk)
+        return {
+            "served": done,
+            "batches": len(lat),
+            "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "p99_batch_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+        }
+
+
+def build_engine(cfg: ModelConfig, pipeline: PipelinePlan,
+                 layer_block_map: list[tuple[int, int]], key) -> ServingEngine:
+    ranges = [(s.block_start, s.block_end) for s in pipeline.stages]
+    model, stage_fns = split_stages(cfg, ranges, layer_block_map)
+    params = model.init(key)
+    executors = []
+    for sp, fn in zip(pipeline.stages, stage_fns):
+        pool = [StageExecutor(stage_fn=fn, params=params) for _ in range(sp.n_vdev)]
+        executors.append(pool)
+    return ServingEngine(cfg=cfg, pipeline=pipeline, executors=executors)

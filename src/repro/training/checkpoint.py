@@ -1,0 +1,143 @@
+"""Sharded, atomic, async-capable checkpointing (no external deps).
+
+Layout:  <dir>/step_<N>/
+           manifest.json      tree structure, dtypes, shapes, checksums
+           arr_<i>.npy        one file per leaf (host-local shards on TPU)
+           _COMMITTED         written last -> partial checkpoints are ignored
+
+Restore handles *elastic resharding*: arrays are loaded host-side and placed
+with `jax.device_put` under the (possibly different) target mesh/shardings,
+so a run can resume on a shrunk or regrown cluster (see elastic.py).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(
+    directory: str,
+    step: int,
+    tree,
+    async_: bool = False,
+) -> threading.Thread | None:
+    """Write a checkpoint; with async_=True, serialization happens on a
+    background thread after device->host transfer."""
+    host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+    treedef = jax.tree.structure(tree)
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, arr in enumerate(host_leaves):
+            fname = f"arr_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append(
+                {
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+                }
+            )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+            f.write(str(time.time()))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(directory: str) -> int | None:
+    """Newest *committed* checkpoint step, or None."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+            continue  # torn write (e.g. node died mid-save): skip
+        step = int(name.split("_")[1])
+        best = step if best is None or step > best else best
+    return best
+
+
+def restore(
+    directory: str,
+    like,
+    step: int | None = None,
+    shardings=None,
+):
+    """Restore into the structure of `like`; verifies checksums.
+
+    `shardings`: optional pytree of Sharding matching `like` — arrays are
+    placed there (elastic resume onto a different mesh)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(like_leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, expected {len(like_leaves)}"
+        )
+    shard_leaves = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(like_leaves)
+    )
+    out = []
+    for meta, like_leaf, shd in zip(manifest["leaves"], like_leaves, shard_leaves):
+        arr = np.load(os.path.join(path, meta["file"]))
+        digest = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+        if digest != meta["sha256"]:
+            raise IOError(f"checksum mismatch in {meta['file']} (corrupt checkpoint)")
+        if tuple(arr.shape) != tuple(like_leaf.shape):
+            raise ValueError(
+                f"shape mismatch {arr.shape} vs {like_leaf.shape} for {meta['file']}"
+            )
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jnp.asarray(arr, dtype=like_leaf.dtype))
+    return jax.tree.unflatten(treedef, out), step
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    """Keep only the newest `keep` committed checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, n, "_COMMITTED"))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,11 @@
+import os
+
+# Tests and benches must see ONE device — the 512-device override belongs to
+# launch/dryrun.py exclusively.
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "do not set the dry-run XLA_FLAGS globally"
+)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

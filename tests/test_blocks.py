@@ -1,0 +1,70 @@
+"""Pre-partitioning (paper section 5.2): coverage + balance properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks, costmodel as cm
+from repro.core.types import TPU_HI, LayerCost
+
+
+def _layers(n, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        f = float(rng.uniform(1e9, 5e10))
+        out.append(LayerCost(f"l{i}", flops=f, act_bytes=f / 100, weight_bytes=f / 50,
+                             out_bytes=1e6))
+    return out
+
+
+def test_blocks_tile_layers_exactly():
+    layers = _layers(57)
+    bl = blocks.pre_partition(layers, 10, TPU_HI)
+    assert bl[0].layer_start == 0
+    assert bl[-1].layer_end == len(layers)
+    for a, b in zip(bl, bl[1:]):
+        assert a.layer_end == b.layer_start
+    assert all(b.layer_end > b.layer_start for b in bl)
+    assert len(bl) <= 10
+
+
+def test_blocks_aggregate_costs():
+    layers = _layers(23)
+    bl = blocks.pre_partition(layers, 5, TPU_HI)
+    assert sum(b.flops for b in bl) == pytest.approx(sum(l.flops for l in layers))
+    assert sum(b.weight_bytes for b in bl) == pytest.approx(
+        sum(l.weight_bytes for l in layers))
+
+
+def test_blocks_balanced_runtime():
+    """Greedy grouping should be within ~2 max-layer runtimes of the mean."""
+    layers = _layers(613)  # paper: avg layer count 613.2
+    bl = blocks.pre_partition(layers, 10, TPU_HI)
+    assert len(bl) == 10
+    rts = [sum(blocks.layer_runtime(l, TPU_HI) for l in layers[b.layer_start:b.layer_end])
+           for b in bl]
+    max_layer = max(blocks.layer_runtime(l, TPU_HI) for l in layers)
+    mean = sum(rts) / len(rts)
+    assert max(rts) <= mean + 2 * max_layer
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_layers=st.integers(2, 80), n_blocks=st.integers(1, 12), seed=st.integers(0, 10_000))
+def test_blocks_properties(n_layers, n_blocks, seed):
+    layers = _layers(n_layers, seed)
+    bl = blocks.pre_partition(layers, n_blocks, TPU_HI)
+    # tiles exactly, never exceeds requested count, never empty
+    assert bl[0].layer_start == 0 and bl[-1].layer_end == n_layers
+    assert 1 <= len(bl) <= n_blocks
+    for a, b in zip(bl, bl[1:]):
+        assert a.layer_end == b.layer_start
+        assert b.layer_end > b.layer_start
+
+
+def test_build_profile():
+    prof = blocks.build_profile("m", _layers(40), slo_s=0.1, n_blocks=8)
+    assert prof.n_blocks <= 8
+    assert prof.boundary_bytes(prof.n_blocks, 4) == 0.0
+    assert prof.boundary_bytes(1, 4) == pytest.approx(
+        prof.blocks[0].out_bytes * 4 * 0.5)

@@ -1,0 +1,62 @@
+"""Analytical profiler properties: the diversity PPipe exploits must exist."""
+
+import pytest
+
+from repro.core import blocks, costmodel as cm
+from repro.core.types import TPU_HI, TPU_LO, ClusterSpec, LayerCost
+
+
+def _block(flops, act, w):
+    return blocks._make_block(
+        [LayerCost("l", flops=flops, act_bytes=act, weight_bytes=w, out_bytes=1e6)],
+        0, 0, 1)
+
+
+def test_latency_monotone_in_batch():
+    b = _block(1e11, 1e8, 1e9)
+    lats = [cm.block_latency(b, TPU_HI, 1, bs) for bs in (1, 2, 4, 8, 16)]
+    assert all(l2 > l1 for l1, l2 in zip(lats, lats[1:]))
+
+
+def test_cobatch_vdev_raises_per_chip_throughput_when_memory_bound():
+    """Weight-bound blocks amortize weight reads across co-batch tenants."""
+    b = _block(1e9, 1e6, 4e9)  # weight-dominated
+    thr = [v * 1 / cm.block_latency(b, TPU_HI, v, 1) for v in (1, 2, 4)]
+    assert thr[1] > thr[0] and thr[2] > thr[1]
+
+
+def test_vdev_latency_grows():
+    b = _block(1e11, 1e8, 1e9)
+    lats = [cm.block_latency(b, TPU_HI, v, 2) for v in (1, 2, 3, 4)]
+    assert all(l2 > l1 for l1, l2 in zip(lats, lats[1:]))
+
+
+def test_cross_class_ratio_diversity():
+    """Paper Fig. 3: compute-bound blocks see larger hi/lo ratios than
+    memory-bound ones — the property GPU-aware partitioning exploits."""
+    mxu_bound = _block(1e12, 1e7, 1e8)
+    mem_bound = _block(1e8, 1e7, 4e9)
+    r_mxu = cm.block_latency(mxu_bound, TPU_LO) / cm.block_latency(mxu_bound, TPU_HI)
+    r_mem = cm.block_latency(mem_bound, TPU_LO) / cm.block_latency(mem_bound, TPU_HI)
+    assert r_mxu > r_mem > 1.0
+
+
+def test_latency_table_matches_direct():
+    layers = [LayerCost(f"l{i}", 1e10 * (i + 1), 1e7, 1e8, 1e6) for i in range(6)]
+    prof = blocks.build_profile("m", layers, 0.1, n_blocks=3)
+    cluster = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 2})
+    tbl = cm.build_latency_table(prof, cluster, vfracs=(1, 2), batch_sizes=(1, 4))
+    for blk in prof.blocks:
+        assert tbl.lat[(blk.index, "tpu-hi", 2, 4)] == pytest.approx(
+            cm.block_latency(blk, TPU_HI, 2, 4))
+    assert tbl.partition(0, prof.n_blocks, "tpu-lo", 1, 1) == pytest.approx(
+        sum(cm.block_latency(b, TPU_LO, 1, 1) for b in prof.blocks))
+
+
+def test_transfer_latency_uses_bottleneck_nic():
+    layers = [LayerCost("l", 1e10, 1e7, 1e8, out_bytes=2e6)]
+    prof = blocks.build_profile("m", layers * 4, 0.1, n_blocks=2)
+    cluster = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 2})
+    t = cm.transfer_latency(prof, cluster, "tpu-hi", "tpu-lo", 1, 2)
+    expect_bytes = prof.boundary_bytes(1, 2)
+    assert t >= expect_bytes / cluster.effective_nic_bw("tpu-lo")

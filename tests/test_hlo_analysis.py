@@ -1,0 +1,75 @@
+"""Roofline extraction: HLO shape parsing, collective accounting, terms."""
+
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def test_shape_bytes():
+    assert ha.shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert ha.shape_bytes("bf16[128]") == 256
+    assert ha.shape_bytes("(f32[4,4], s8[16])") == 64 + 16
+    assert ha.shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_operands():
+    hlo = """
+HloModule m
+ENTRY %main {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %p1 = f32[64,128]{1,0} parameter(1)
+  %ag = f32[64,2048]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[64,128]{1,0} all-reduce(%p1), to_apply=%add
+  %cp = f32[64,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  %a2a = f32[64,128]{1,0} all-to-all(%cp), dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%a2a), dimensions={0}
+  ROOT %t = tuple(%ag, %rs)
+}
+"""
+    stats = ha.parse_collectives(hlo)
+    leaf = 64 * 128 * 4
+    assert stats.bytes_by_op["all-gather"] == leaf
+    assert stats.bytes_by_op["all-reduce"] == leaf
+    assert stats.bytes_by_op["collective-permute"] == leaf
+    assert stats.bytes_by_op["all-to-all"] == leaf
+    assert stats.bytes_by_op["reduce-scatter"] == leaf
+    assert stats.total_count == 5
+
+
+def test_parse_skips_async_done_pairs():
+    hlo = """
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ags = (f32[64,128], f32[64,2048]) all-gather-start(%p0), dimensions={1}
+  %agd = f32[64,2048]{1,0} all-gather-done(%ags)
+"""
+    stats = ha.parse_collectives(hlo)
+    assert stats.count_by_op.get("all-gather", 0) == 1
+
+
+def test_roofline_terms_and_dominance():
+    t = ha.RooflineTerms(
+        flops_per_device=197e12,  # exactly 1 second of compute
+        hbm_bytes_per_device=819e9 * 0.5,
+        collective_bytes_per_device=50e9 * 0.25,
+        n_devices=256,
+    )
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(0.25)
+    assert t.dominant == "compute"
+    assert t.bound_s == pytest.approx(1.0)
+
+
+def test_model_flops():
+    assert ha.model_flops(1e9, 1e6, training=True) == 6e15
+    assert ha.model_flops(1e9, 1e6, training=False) == 2e15
+
+
+def test_analytic_hbm_bytes_decode_dominated_by_cache():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("qwen3-14b")
+    b = ha.analytic_hbm_bytes(cfg, SHAPES["decode_32k"], 256)
+    # KV cache read should be a visible fraction of decode traffic
+    cache = ha._decode_cache_bytes(cfg, 32768, 128) / 256
+    assert b > cache * 0.9

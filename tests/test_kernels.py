@@ -1,0 +1,142 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.boundary_quant import kernel as bq_k, ref as bq_r
+from repro.kernels.decode_attention import kernel as da_k, ref as da_r
+from repro.kernels.flash_attention import kernel as fa_k, ref as fa_r
+from repro.kernels.rmsnorm import kernel as rn_k, ref as rn_r
+from repro.kernels.ssd_scan import kernel as ssd_k, ref as ssd_r
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,H,KH,S,D", [
+    (2, 4, 2, 256, 64), (1, 8, 8, 128, 128), (2, 6, 2, 384, 128), (1, 2, 1, 512, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, KH, S, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S, D), dtype)
+    out = fa_k.flash_attention(q, k, v, causal=True, interpret=True)
+    ref = fa_r.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 4, 256, 64), jnp.float32)
+    out = fa_k.flash_attention(q, k, v, causal=False, interpret=True)
+    ref = fa_r.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("B,KH,G,S,D", [(2, 2, 4, 512, 64), (1, 4, 1, 1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, KH, G, S, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KH, G, D), dtype)
+    k = jax.random.normal(ks[1], (B, KH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KH, S, D), dtype)
+    kv_len = jnp.int32(S - 13)
+    out = da_k.decode_attention(q, k, v, kv_len, interpret=True)
+    ref = da_r.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_kv_len_masks_tail():
+    """Garbage beyond kv_len must not leak into the output."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    kv_len = jnp.int32(100)
+    out1 = da_k.decode_attention(q, k, v, kv_len, interpret=True)
+    k2 = k.at[:, :, 100:].set(1e4)
+    v2 = v.at[:, :, 100:].set(-1e4)
+    out2 = da_k.decode_attention(q, k2, v2, kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+@pytest.mark.parametrize("N,D", [(256, 512), (512, 384), (128, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(N, D, dtype):
+    x = jax.random.normal(KEY, (N, D), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (D,), dtype)
+    out = rn_k.rmsnorm(x, w, interpret=True)
+    ref = rn_r.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("N,D", [(256, 512), (512, 1024)])
+def test_boundary_quant_matches_ref(N, D):
+    x = jax.random.normal(KEY, (N, D), jnp.bfloat16)
+    q, s = bq_k.quantize(x, interpret=True)
+    qr, sr = bq_r.quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_boundary_quant_roundtrip_bound(seed, scale):
+    """Property: roundtrip error bounded by scale/2 per element for any input."""
+    x = (jax.random.normal(jax.random.PRNGKey(seed), (64, 128), jnp.float32)
+         * scale).astype(jnp.bfloat16)
+    q, s = bq_k.quantize(x, interpret=True)
+    xd = bq_k.dequantize(q, s, dtype=jnp.float32, interpret=True)
+    bound = bq_r.roundtrip_error_bound(x)
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(xd))
+    assert np.all(err <= np.asarray(bound) + np.asarray(bound) * 0.1 + 1e-6)
+
+
+@pytest.mark.parametrize("B,NH,T,DK,DV,chunk", [
+    (2, 3, 128, 16, 32, 32), (1, 2, 256, 32, 16, 64), (1, 1, 64, 8, 8, 64),
+])
+def test_ssd_scan(B, NH, T, DK, DV, chunk):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, NH, T, DK)) * 0.5
+    k = jax.random.normal(ks[1], (B, NH, T, DK)) * 0.5
+    v = jax.random.normal(ks[2], (B, NH, T, DV)) * 0.5
+    log_g = -jax.nn.softplus(jax.random.normal(ks[3], (B, NH, T)))
+    log_i = -jax.nn.softplus(jax.random.normal(ks[4], (B, NH, T)))
+    y, S = ssd_k.ssd_scan(q, k, v, log_g, log_i, chunk=chunk, interpret=True)
+    ye, Se = ssd_r.ssd_scan_ref(q, k, v, log_g, log_i)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=5e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(Se), atol=5e-4, rtol=2e-3)
+
+
+def test_ssd_scan_matches_model_oracle():
+    """Kernel agrees with the model-side chunked implementation too."""
+    from repro.models.ssm import chunked_linear_attention
+
+    ks = jax.random.split(KEY, 4)
+    B, NH, T, DK, DV = 1, 2, 128, 16, 16
+    q = jax.random.normal(ks[0], (B, NH, T, DK)) * 0.5
+    k = jax.random.normal(ks[1], (B, NH, T, DK)) * 0.5
+    v = jax.random.normal(ks[2], (B, NH, T, DV)) * 0.5
+    log_g = -jax.nn.softplus(jax.random.normal(ks[3], (B, NH, T)))
+    y_k, S_k = ssd_k.ssd_scan(q, k, v, log_g, chunk=32, interpret=True)
+    # model routine uses (B, T, NH, *) layout
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    y_m, S_m = chunked_linear_attention(tr(q), tr(k), tr(v),
+                                        log_g.transpose(0, 2, 1), chunk=64)
+    np.testing.assert_allclose(np.asarray(tr(y_m)), np.asarray(y_k), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(S_m), np.asarray(S_k), atol=1e-4, rtol=1e-3)

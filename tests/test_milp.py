@@ -1,0 +1,125 @@
+"""Control-plane tests: literal Appendix-A.2 MILP vs the scalable planner."""
+
+import numpy as np
+import pytest
+
+from repro.core import blocks, costmodel as cm
+from repro.core.baselines import plan_dart_r, plan_np
+from repro.core.enumerate import enumerate_templates, plan_cluster
+from repro.core.milp import solve_milp
+from repro.core.types import ClusterSpec, LayerCost
+
+
+def _profile(n_layers=8, n_blocks=4, slo=0.03, seed=0, seq=256, name="m"):
+    rng = np.random.default_rng(seed)
+    layers = [cm.embed_cost(seq, 1024, 32000)]
+    for i in range(n_layers):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(seq, 1024, 16, 4),
+            cm.mlp_cost(seq, 1024, int(rng.uniform(2048, 8192))),
+        ]))
+    layers.append(cm.head_cost(seq, 1024, 32000))
+    return blocks.build_profile(name, layers, slo, n_blocks=n_blocks)
+
+
+CLUSTER = ClusterSpec(counts={"tpu-hi": 3, "tpu-lo": 6})
+
+
+def _table(prof, cluster=CLUSTER):
+    return cm.build_latency_table(prof, cluster, vfracs=(1, 2), batch_sizes=(1, 2))
+
+
+def test_enumerate_matches_literal_milp_optimum():
+    """The template planner and the literal MILP must agree (DESIGN.md sec 5)."""
+    prof = _profile(n_layers=6, n_blocks=3, slo=0.02)
+    tbl = _table(prof)
+    lit = solve_milp(prof, tbl, CLUSTER, slo_margin=0.4, max_partitions=2,
+                     time_limit_s=30.0)
+    enum = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4,
+                        max_partitions=2)
+    assert enum.plan.throughput == pytest.approx(lit.throughput, rel=1e-4)
+
+
+def test_plan_respects_budget_and_slo():
+    prof = _profile(slo=0.025)
+    tbl = _table(prof)
+    res = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4)
+    res.plan.validate({"m": prof}, slo_margin=0.4)
+    assert res.plan.throughput > 0
+    assert res.plan.throughput <= res.lp_upper_bound * (1 + 1e-6)
+
+
+def test_batch_size_unification():
+    """All partitions of a pooled pipeline share one batch size (sec 5.3)."""
+    prof = _profile(slo=0.02)
+    tbl = cm.build_latency_table(prof, CLUSTER, vfracs=(1, 2, 4), batch_sizes=(1, 2, 4))
+    res = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4)
+    for t in enumerate_templates(prof, tbl, CLUSTER, 0.4, 3):
+        assert isinstance(t.batch, int)  # one batch per template by construction
+    for p in res.plan.pipelines:
+        assert p.batch_size in (1, 2, 4)
+
+
+def _tight_slo_profile():
+    """SLO budget between the two classes' whole-model latencies: the low
+    class cannot serve the whole model, partitioning is the only way to use it."""
+    from repro.core.types import replace
+
+    prof = _profile(n_layers=16, n_blocks=8, slo=1.0)
+    tbl0 = _table(prof)
+    whole_lo = tbl0.partition(0, prof.n_blocks, "tpu-lo", 1, 1)
+    whole_hi = tbl0.partition(0, prof.n_blocks, "tpu-hi", 1, 1)
+    slo = (whole_hi * 1.4 + whole_lo * 0.6) / 2 / 0.6  # budget = slo*(1-0.4)
+    prof = replace(prof, slo_s=slo)
+    return prof, _table(prof), whole_hi, whole_lo
+
+
+def test_tight_slo_forces_partitioning():
+    """When the low class cannot serve the whole model within SLO, the optimal
+    plan uses pipelines so low-class chips still contribute (the paper's
+    central claim)."""
+    prof, tbl, whole_hi, whole_lo = _tight_slo_profile()
+    budget = prof.slo_s * 0.6
+    assert whole_hi < budget < whole_lo
+    res = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4)
+    assert any(p.n_stages > 1 for p in res.plan.pipelines)
+    used = res.plan.chips_used()
+    assert used.get("tpu-lo", 0) > 0
+
+
+def test_multi_model_normalized_objective():
+    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    tbls = {k: _table(v) for k, v in profs.items()}
+    weights = {"m0": 1.0, "m1": 2.0}
+    res = plan_cluster(profs, tbls, CLUSTER, weights=weights, slo_margin=0.4)
+    t0 = res.plan.throughput_of("m0")
+    t1 = res.plan.throughput_of("m1")
+    assert t0 > 0 and t1 > 0
+    # normalized throughputs should be balanced within integral granularity
+    assert abs(t1 / 2.0 - t0) / max(t0, t1 / 2.0) < 0.5
+
+
+def test_np_baseline_never_partitions():
+    prof = _profile()
+    tbl = _table(prof)
+    res = plan_np({"m": prof}, {"m": tbl}, CLUSTER)
+    assert all(p.n_stages == 1 for p in res.plan.pipelines)
+
+
+def test_dart_r_builds_pairs():
+    prof = _profile(slo=0.02)
+    tbl = _table(prof)
+    res = plan_dart_r({"m": prof}, {"m": tbl}, CLUSTER)
+    chained = [p for p in res.plan.pipelines if p.n_stages == 2]
+    for p in chained:
+        assert all(s.n_vdev == 1 for s in p.stages)  # chain: one chip per stage
+    res.plan.validate({"m": prof}, slo_margin=0.4)
+
+
+def test_ppipe_beats_baselines_under_tight_slo():
+    prof, tbl, _, _ = _tight_slo_profile()
+    pp = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4)
+    np_ = plan_np({"m": prof}, {"m": tbl}, CLUSTER)
+    dart = plan_dart_r({"m": prof}, {"m": tbl}, CLUSTER)
+    assert pp.plan.throughput >= np_.plan.throughput - 1e-6
+    assert pp.plan.throughput >= dart.plan.throughput - 1e-6

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU) + the key
+serving-correctness property: prefill+decode logits match the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model_zoo import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    if cfg.family == "audio":
+        return {"tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) % cfg.vocab,
+                "frames": jax.random.normal(KEY, (B, S, cfg.d_model), cfg.dtype)}
+    if cfg.family == "vlm":
+        F = cfg.frontend_tokens
+        return {"tokens": jnp.arange(B * (S - F), dtype=jnp.int32).reshape(B, S - F) % cfg.vocab,
+                "patches": jax.random.normal(KEY, (B, F, cfg.d_model), cfg.dtype) * 0.1}
+    return {"tokens": jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) % cfg.vocab}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """One forward + one train step on CPU: output shapes + no NaNs."""
+    from repro.training import AdamWConfig, init_opt_state, make_train_step
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    B, S = 2, 16
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+    step = make_train_step(model, AdamWConfig(lr=1e-3), remat=True)
+    opt = init_opt_state(params, AdamWConfig())
+    p2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if
+                                  get_config(a).family != "audio"])
+def test_prefill_decode_matches_forward(arch):
+    """Serving invariant: logits from prefill + step-by-step decode equal the
+    teacher-forced forward at every position."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S, extra = 2, 12, 4
+    batch = _batch(cfg, B, S)
+    full = np.asarray(model.forward(params, batch), np.float32)
+
+    lg, cache = model.prefill(params, batch, max_len=S + extra)
+    np.testing.assert_allclose(lg[:, 0].astype(np.float32), full[:, -1],
+                               atol=3e-2, rtol=3e-2)
+
+    # continue decoding: feed tokens S.. and compare against extended forward
+    toks = batch["tokens"]
+    ext = jnp.concatenate(
+        [toks, (jnp.arange(B * extra, dtype=jnp.int32).reshape(B, extra) + 7) % cfg.vocab],
+        axis=1)
+    batch_ext = dict(batch, tokens=ext)
+    full_ext = np.asarray(model.forward(params, batch_ext), np.float32)
+    # S counts the TOTAL prefix (frontend + text); new tokens sit at S+i
+    n_text = batch["tokens"].shape[1]
+    for i in range(extra):
+        tok = ext[:, n_text + i][:, None]
+        lg, cache = model.decode_step(params, tok, cache, jnp.int32(S + i))
+        got = np.asarray(lg[:, 0], np.float32)
+        want = full_ext[:, S + i]
+        # bf16 decode numerics drift slightly from the chunked full-seq path:
+        # bound the absolute error and require argmax agreement wherever the
+        # top-2 margin exceeds the numeric tolerance (near-ties may flip)
+        np.testing.assert_allclose(got, want, atol=0.25, rtol=0.25)
+        top2 = np.sort(want, axis=-1)[:, -2:]
+        decisive = (top2[:, 1] - top2[:, 0]) > 0.3
+        agree = got.argmax(-1) == want.argmax(-1)
+        assert agree[decisive].all() if decisive.any() else True
+
+
+def test_audio_prefill_decode_consistency():
+    """Enc-dec: decode after prefill matches teacher-forced decoder forward."""
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    bos = 1
+    # teacher-forced forward with tokens [bos, t1, t2...]
+    toks = jnp.concatenate(
+        [jnp.full((B, 1), bos, jnp.int32), batch["tokens"][:, : S - 1]], axis=1)
+    full = np.asarray(model.forward(params, dict(batch, tokens=toks)), np.float32)
+    lg, cache = model.prefill(params, batch, max_len=S)
+    np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32), full[:, 0],
+                               atol=3e-2, rtol=3e-2)
+    for i in range(1, 4):
+        lg, cache = model.decode_step(params, toks[:, i][:, None], cache, jnp.int32(i))
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32), full[:, i],
+                                   atol=5e-2, rtol=5e-2)
+
+
+def test_deepseek_mla_cache_is_compressed():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(2, 64))
+    assert set(cache) == {"c_kv", "k_rope"}
+    assert cache["c_kv"].shape[-1] == cfg.kv_lora_rank
+    # compressed cache must be much smaller than expanded per-head KV
+    expanded = 2 * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+    assert cache["c_kv"].shape[-1] + cache["k_rope"].shape[-1] < expanded / 4
+
+
+def test_moe_capacity_drop_keeps_shapes():
+    cfg = get_config("llama4-maverick-400b-a17b").reduced(capacity_factor=0.5)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    logits = model.forward(params, _batch(cfg))
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+
+def test_zamba_shared_attention_is_shared():
+    cfg = get_config("zamba2-2.7b").reduced()
+    model = build_model(cfg)
+    assert "shared_attn" in model.defs
+    # one attention block's worth of params, not one per group
+    leaves = jax.tree.leaves(model.defs["shared_attn"],
+                             is_leaf=lambda x: hasattr(x, "dims"))
+    assert all(d.dims[0] != "layers" for d in leaves)
+
+
+def test_xlstm_pattern_structure():
+    cfg = get_config("xlstm-1.3b")
+    assert cfg.ssm_pattern.count("M") == 42 and cfg.ssm_pattern.count("s") == 6
+    assert len(cfg.ssm_pattern) == cfg.n_layers == 48

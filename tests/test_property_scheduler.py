@@ -1,0 +1,74 @@
+"""Hypothesis property tests on data-plane invariants (Algorithm 1/2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks, costmodel as cm
+from repro.core.enumerate import plan_cluster
+from repro.core.runtime import build_runtime
+from repro.core.simulator import run_simulation
+from repro.core.types import ClusterSpec
+from repro.data.requests import bursty_trace, poisson_trace
+
+
+def _plan(seed=0):
+    layers = [cm.embed_cost(256, 1024, 32000)]
+    for i in range(8):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(256, 1024, 16, 4), cm.mlp_cost(256, 1024, 4096)]))
+    layers.append(cm.head_cost(256, 1024, 32000))
+    prof = blocks.build_profile("m", layers, 0.03, n_blocks=5)
+    cluster = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 4})
+    tbl = cm.build_latency_table(prof, cluster)
+    res = plan_cluster({"m": prof}, {"m": tbl}, cluster, slo_margin=0.4)
+    return prof, res.plan
+
+
+PROF, PLAN = _plan()
+
+
+@settings(max_examples=12, deadline=None)
+@given(load=st.floats(0.1, 2.0), seed=st.integers(0, 1000),
+       bursty=st.booleans(), noise=st.floats(0.0, 0.1))
+def test_simulation_invariants(load, seed, bursty, noise):
+    """For ANY load/burstiness/noise:
+    1. every request yields exactly one outcome (served xor dropped);
+    2. completions never precede arrivals;
+    3. a request counted OK completed within its deadline;
+    4. utilization within [0, 1.02]."""
+    gen = bursty_trace if bursty else poisson_trace
+    trace = gen(max(PLAN.throughput, 1.0) * load, 3.0, PROF.slo_s, "m", seed=seed)
+    sim = run_simulation(build_runtime(PLAN, {"m": PROF}), trace,
+                         noise_sigma=noise, seed=seed)
+    assert len(sim.outcomes) == len(trace)
+    ids = sorted(o.req_id for o in sim.outcomes)
+    assert ids == sorted(r.req_id for r in trace)
+    arrivals = {r.req_id: r.arrival_s for r in trace}
+    for o in sim.outcomes:
+        if o.completion_s is not None:
+            assert o.completion_s >= arrivals[o.req_id] - 1e-9
+            if o.ok:
+                assert o.completion_s <= o.deadline_s + 1e-6
+    for u in sim.utilization.values():
+        assert -1e-9 <= u <= 1.02
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_batches_respect_unified_batch_size(seed):
+    """Dispatched batches never exceed the pipeline's unified batch size."""
+    from repro.core.scheduler import Dispatch, ReservationScheduler
+    from repro.core.types import Request
+
+    rt = build_runtime(PLAN, {"m": PROF})
+    sched = ReservationScheduler(rt)
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(60):
+        t += float(rng.exponential(1.0 / max(PLAN.throughput, 1.0)))
+        sched.enqueue(Request(arrival_s=t, req_id=i, model_name="m",
+                              deadline_s=t + PROF.slo_s))
+        for action in sched.schedule("m", t):
+            if isinstance(action, Dispatch):
+                assert len(action.requests) <= action.pipeline.unified_batch
+                assert len(action.requests) >= 1

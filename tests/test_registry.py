@@ -1,0 +1,103 @@
+"""Assigned configs: exact published dims, shapes, applicability, input specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+
+EXPECT = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+    "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, dff, vocab = EXPECT[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.kv_heads == kv
+    assert cfg.d_ff == dff
+    assert cfg.vocab == vocab
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-v3-671b")
+    assert ds.n_experts == 256 and ds.top_k == 8 and ds.n_shared_experts == 1
+    assert ds.mla and ds.mtp
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert l4.n_experts == 128 and l4.top_k == 1
+
+
+def test_zamba_ssm_state():
+    assert get_config("zamba2-2.7b").d_state == 64
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_500k_applicability():
+    ok_archs = [a for a in ARCH_IDS if shape_applicable(a, "long_500k")[0]]
+    assert sorted(ok_archs) == ["xlstm-1.3b", "zamba2-2.7b"]
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(a, s)[0]
+
+
+def test_vocab_padding_divisible_by_model_axis():
+    for arch in ARCH_IDS:
+        assert get_config(arch).padded_vocab % 16 == 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "llava-next-34b",
+                                  "seamless-m4t-large-v2", "zamba2-2.7b"])
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    sp = SHAPES["prefill_32k"]
+    specs = input_specs(cfg, sp)
+    B, S = sp.global_batch, sp.seq_len
+    if cfg.family == "vlm":
+        assert specs["tokens"].shape == (B, S - cfg.frontend_tokens)
+        assert specs["patches"].shape == (B, cfg.frontend_tokens, cfg.d_model)
+    elif cfg.family == "audio":
+        assert specs["frames"].shape == (B, S, cfg.d_model)
+    else:
+        assert specs["tokens"].shape == (B, S)
+    assert specs["tokens"].dtype == jnp.int32
+
+
+def test_decode_specs_have_cache():
+    cfg = get_config("qwen3-14b").reduced()
+    sp = SHAPES["decode_32k"]
+    # reduced config keeps the structure; use a small S to keep eval_shape fast
+    import dataclasses
+
+    from repro.configs.registry import ShapeSpec
+    small = ShapeSpec("d", 64, 4, "decode")
+    specs = input_specs(cfg, small)
+    assert specs["token"].shape == (4, 1)
+    assert set(specs["cache"]) == {"k", "v"}
+    assert specs["cache"]["k"].shape[0] == cfg.n_layers
+    assert specs["cur_len"].shape == ()

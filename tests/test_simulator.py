@@ -1,0 +1,101 @@
+"""Data-plane end-to-end behaviour on the discrete-event simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import blocks, costmodel as cm
+from repro.core.enumerate import plan_cluster
+from repro.core.runtime import build_runtime
+from repro.core.simulator import run_simulation
+from repro.core.types import ClusterSpec
+from repro.data.requests import bursty_trace, poisson_trace
+
+
+def _setup(slo=0.03, n_layers=12, counts=None):
+    counts = counts or {"tpu-hi": 3, "tpu-lo": 6}
+    layers = [cm.embed_cost(256, 1024, 32000)]
+    for i in range(n_layers):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(256, 1024, 16, 4), cm.mlp_cost(256, 1024, 4096)]))
+    layers.append(cm.head_cost(256, 1024, 32000))
+    prof = blocks.build_profile("m", layers, slo, n_blocks=6)
+    cluster = ClusterSpec(counts=counts)
+    tbl = cm.build_latency_table(prof, cluster)
+    res = plan_cluster({"m": prof}, {"m": tbl}, cluster, slo_margin=0.4)
+    return prof, cluster, res.plan
+
+
+def test_low_load_full_attainment():
+    prof, cluster, plan = _setup()
+    trace = poisson_trace(plan.throughput * 0.3, 5.0, prof.slo_s, "m", seed=0)
+    sim = run_simulation(build_runtime(plan, {"m": prof}), trace)
+    assert sim.attainment >= 0.999
+
+
+def test_attainment_decreases_with_load():
+    prof, cluster, plan = _setup()
+    att = []
+    for lf in (0.4, 0.9, 1.4):
+        trace = poisson_trace(plan.throughput * lf, 5.0, prof.slo_s, "m", seed=1)
+        sim = run_simulation(build_runtime(plan, {"m": prof}), trace)
+        att.append(sim.attainment)
+    assert att[0] >= att[1] >= att[2]
+    assert att[2] < 0.99  # overload must hurt
+
+
+def test_noise_tolerated_by_feedback_correction():
+    prof, cluster, plan = _setup()
+    trace = poisson_trace(plan.throughput * 0.6, 5.0, prof.slo_s, "m", seed=2)
+    sim = run_simulation(build_runtime(plan, {"m": prof}), trace, noise_sigma=0.05)
+    assert sim.attainment >= 0.97
+
+
+def test_utilization_tracks_load():
+    prof, cluster, plan = _setup()
+    utils = []
+    for lf in (0.3, 0.8):
+        trace = poisson_trace(plan.throughput * lf, 5.0, prof.slo_s, "m", seed=3)
+        sim = run_simulation(build_runtime(plan, {"m": prof}), trace)
+        utils.append(sim.utilization)
+    for c in utils[0]:
+        assert utils[1][c] >= utils[0][c] - 0.02
+
+
+def test_bursty_harder_than_poisson():
+    prof, cluster, plan = _setup()
+    rate = plan.throughput * 0.9
+    p = run_simulation(build_runtime(plan, {"m": prof}),
+                       poisson_trace(rate, 6.0, prof.slo_s, "m", seed=4))
+    b = run_simulation(build_runtime(plan, {"m": prof}),
+                       bursty_trace(rate, 6.0, prof.slo_s, "m", seed=4))
+    assert b.attainment <= p.attainment + 0.01
+
+
+def test_reservation_beats_reactive_under_contention():
+    """Paper section 7.4 ablation: without reservations, transfers pile onto
+    saturated NICs and attainment collapses at high load."""
+    prof, cluster, plan = _setup(slo=0.02, n_layers=16,
+                                 counts={"tpu-hi": 2, "tpu-lo": 8})
+    # only meaningful if the plan actually pipelines
+    if all(p.n_stages == 1 for p in plan.pipelines):
+        pytest.skip("plan did not partition at this SLO")
+    rate = plan.throughput * 0.9
+    trace = poisson_trace(rate, 6.0, prof.slo_s, "m", seed=5)
+    resv = run_simulation(build_runtime(plan, {"m": prof}), trace)
+    reac = run_simulation(build_runtime(plan, {"m": prof}), trace, reactive=True)
+    assert resv.attainment >= reac.attainment - 0.005
+
+
+def test_drops_counted_as_outcomes():
+    prof, cluster, plan = _setup()
+    trace = poisson_trace(plan.throughput * 2.5, 3.0, prof.slo_s, "m", seed=6)
+    sim = run_simulation(build_runtime(plan, {"m": prof}), trace)
+    assert len(sim.outcomes) == len(trace)
+
+
+def test_probe_overhead_small():
+    prof, cluster, plan = _setup()
+    trace = poisson_trace(plan.throughput * 0.8, 4.0, prof.slo_s, "m", seed=7)
+    sim = run_simulation(build_runtime(plan, {"m": prof}), trace)
+    # paper reports 3.58 probes per dispatched batch on 100 GPUs
+    assert sim.probes_per_dispatch < 40
