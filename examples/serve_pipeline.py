@@ -1,12 +1,28 @@
-"""End-to-end pooled-pipeline serving with REAL JAX execution.
+"""End-to-end pooled-pipeline serving through the repro.dataplane subsystem.
 
-    PYTHONPATH=src python examples/serve_pipeline.py
+    PYTHONPATH=src python examples/serve_pipeline.py [--quick]
 
-Plans a 2-stage pooled pipeline for a reduced stablelm config, materializes
-each partition as a jitted stage function, quantizes boundary activations
-(int8 Pallas kernel), and pushes batched requests through the pools.
+The full PPipe flow on one host, in three acts:
+
+1/2. cost-model profile -> MILP control plane -> ClusterRuntime -> real jitted
+   stage executors -> the asynchronous DataPlane serving a Poisson and a
+   bursty trace with SLO-aware admission, reservation-driven adaptive
+   batching (Algorithm 1) and overlapped pool dispatch.  Reports SLO
+   attainment, goodput, per-class utilization and queue delays.
+
+3. a 2-stage pooled pipeline (low-class pool feeding a high-class pool,
+   boundary activations quantized between partitions) served in *measured*
+   mode: stage latencies are first calibrated from real execution so the
+   scheduler's virtual clock is the wall clock, then the feedback-correction
+   loop keeps the reservation tables in sync with measured stage times.
+
+At reduced-model scale the MILP prefers single-partition pooled pipelines —
+µs-scale stages cannot amortize the fixed connection overhead of a feature-
+map transfer (the paper's CNNs run at ms scale, where partitioning wins) —
+which is why act 3 pins the partitioning explicitly.
 """
 
+import argparse
 import sys
 import time
 
@@ -15,41 +31,118 @@ sys.path.insert(0, "src")
 import jax
 
 from repro.configs import get_config
-from repro.core.plan import PipelinePlan, StagePlan
-from repro.core.types import Request
-from repro.serving.engine import build_engine
+from repro.core import blocks, costmodel as cm
+from repro.core.enumerate import plan_cluster
+from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
+from repro.core.runtime import build_runtime
+from repro.core.types import ClusterSpec, replace
+from repro.data.requests import bursty_trace, describe, poisson_trace
+from repro.dataplane import (
+    DataPlane,
+    PoolDispatcher,
+    build_executors,
+    calibrate_runtime,
+)
+from repro.models.model_zoo import layer_costs
+from repro.serving.engine import layer_block_map_from_profile
+
+SEQ = 32
+
+
+def make_setup():
+    cfg = get_config("stablelm-3b").reduced(n_layers=8, d_model=256, d_ff=512,
+                                            n_heads=4, kv_heads=4, vocab=2048)
+    cluster = ClusterSpec(counts={"tpu-hi": 1, "tpu-lo": 8})
+    costs = layer_costs(cfg, SEQ)
+    prof0 = blocks.build_profile(cfg.name, costs, slo_s=1.0, n_blocks=6,
+                                 accel=cluster.accel("tpu-hi"))
+    base = sum(cm.block_latency(b, cluster.accel("tpu-hi"), 1, 1)
+               for b in prof0.blocks)
+    prof = replace(prof0, slo_s=base * 3.0)
+    return cfg, cluster, prof
+
+
+def milp_plan(cfg, cluster, prof):
+    tbl = cm.build_latency_table(prof, cluster)
+    res = plan_cluster({cfg.name: prof}, {cfg.name: tbl}, cluster,
+                       slo_margin=0.4)
+    return res.plan
+
+
+def staged_plan(cfg, cluster, prof):
+    """Hand-pinned 2-stage pooled pipeline: 3-member low-class pool for the
+    early blocks, the high-class chip for the rest (act 3)."""
+    tbl = cm.build_latency_table(prof, cluster)
+    bs, cut, n = 4, 3, prof.n_blocks
+    pipeline = PipelinePlan(
+        model_name=cfg.name, batch_size=bs,
+        stages=(
+            StagePlan(0, cut, "tpu-lo", 1, 3, tbl.partition(0, cut, "tpu-lo", 1, bs)),
+            StagePlan(cut, n, "tpu-hi", 1, 1, tbl.partition(cut, n, "tpu-hi", 1, bs)),
+        ),
+        xfer_latency_s=(cm.transfer_latency(prof, cluster, "tpu-lo", "tpu-hi",
+                                            cut, bs),),
+    )
+    return ClusterPlan(cluster=cluster, pipelines=[pipeline])
+
+
+def serve_workload(name, trace, plan, prof, cfg, executors, feedback="planned",
+                   runtime=None):
+    runtime = runtime or build_runtime(plan, {cfg.name: prof})
+    dispatcher = PoolDispatcher.from_runtime(runtime, executors, max_inflight=4)
+    dp = DataPlane(runtime, dispatcher=dispatcher, feedback=feedback,
+                   seq_len=SEQ)
+    t0 = time.perf_counter()
+    tel = dp.serve(trace)
+    wall = time.perf_counter() - t0
+    st = describe(trace)
+    print(f"\n[{name}] {st.n} reqs, mean {st.mean_rps:.0f} rps "
+          f"(peak {st.peak_rps:.0f}), interarrival CV {st.cv_interarrival:.2f}, "
+          f"SLO {st.slo_s*1e3:.3f} ms  ({wall:.2f}s wall)")
+    print("  " + tel.summary())
+    return tel
 
 
 def main():
-    cfg = get_config("stablelm-3b").reduced(n_layers=8, d_model=256, d_ff=512,
-                                            n_heads=4, kv_heads=4, vocab=2048)
-    # block map: embed + 4 layer-blocks (2 layers each) + head
-    lbm = [(0, 0)] + [(i, i + 2) for i in range(0, 8, 2)] + [(8, 8)]
-    n = len(lbm)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller traces (CI smoke run)")
+    args = ap.parse_args()
+    n_req = 32 if args.quick else 96
+    key = jax.random.PRNGKey(0)
 
-    # a pooled pipeline: early blocks on a 3-member low-class pool, the rest
-    # on a 2-member high-class pool (batch size unified at 4)
-    plan = PipelinePlan(
-        model_name=cfg.name, batch_size=4,
-        stages=(
-            StagePlan(0, 3, "tpu-lo", 1, 3, 0.004),
-            StagePlan(3, n, "tpu-hi", 1, 2, 0.003),
-        ),
-        xfer_latency_s=(0.0005,),
-    )
-    engine = build_engine(cfg, plan, lbm, jax.random.PRNGKey(0))
-    print(f"pipeline: {plan.n_stages} stages, pools of "
-          f"{[s.n_vdev for s in plan.stages]} members, unified batch "
-          f"{plan.batch_size}")
+    cfg, cluster, prof = make_setup()
+    lbm = layer_block_map_from_profile(prof, cfg.n_layers)
 
-    reqs = [Request(arrival_s=i * 1e-3, req_id=i, model_name=cfg.name,
-                    deadline_s=i * 1e-3 + 0.2) for i in range(64)]
-    t0 = time.perf_counter()
-    stats = engine.serve(reqs, seq_len=64)
-    wall = time.perf_counter() - t0
-    print(f"served {stats['served']} requests in {stats['batches']} batches, "
-          f"{wall:.2f}s wall, mean batch latency "
-          f"{stats['mean_batch_latency_s']*1e3:.1f} ms")
+    # ---- acts 1/2: MILP plan, planned feedback, Poisson + bursty ----------
+    plan = milp_plan(cfg, cluster, prof)
+    print(plan.summary())
+    executors = build_executors(cfg, plan, lbm, key)
+    rate = plan.throughput * 0.6
+    for name, gen in (("poisson", poisson_trace), ("bursty", bursty_trace)):
+        trace = gen(rate, n_req / rate, prof.slo_s, cfg.name, seed=7)
+        tel = serve_workload(name, trace, plan, prof, cfg, executors)
+        assert len(tel.outcomes) == len(trace)
+
+    # ---- act 3: pinned 2-stage pipeline, measured (calibrated) feedback ---
+    plan2 = staged_plan(cfg, cluster, prof)
+    print("\n" + plan2.summary())
+    executors2 = build_executors(cfg, plan2, lbm, key)
+    runtime = build_runtime(plan2, {cfg.name: prof})
+    calibrate_runtime(runtime, executors2, SEQ)
+    p0 = runtime.pipelines[0]
+    e2e = sum(s.latency(1) for s in p0.stages)
+    thr = min(len(s.vdevs) * p0.unified_batch / s.latency(p0.unified_batch)
+              for s in p0.stages)
+    print(f"calibrated: e2e batch-1 latency {e2e*1e3:.1f} ms, "
+          f"measured pipeline throughput ~{thr:.0f} rps")
+    rate = thr * 0.5
+    n_meas = max(24, n_req // 3)
+    trace = bursty_trace(rate, n_meas / rate, e2e * 6, cfg.name, seed=11)
+    # serve on the SAME calibrated runtime the printed numbers describe
+    tel = serve_workload("bursty/measured 2-stage", trace, plan2, prof, cfg,
+                         executors2, feedback="measured", runtime=runtime)
+    assert len(tel.outcomes) == len(trace)
 
 
 if __name__ == "__main__":

@@ -165,8 +165,15 @@ class StageRuntime:
     latency_by_batch: dict[int, float]
     # bytes to transfer INTO this stage per request (0 for first stage)
     in_bytes_per_req: float
+    # feedback-correction multiplier: the data plane's FeedbackController sets
+    # this to the EWMA of measured/planned duration so future probes price the
+    # stage at its observed speed (paper section 5.4, feedback correction).
+    lat_scale: float = 1.0
 
     def latency(self, bs: int) -> float:
+        return self._base_latency(bs) * self.lat_scale
+
+    def _base_latency(self, bs: int) -> float:
         if bs in self.latency_by_batch:
             return self.latency_by_batch[bs]
         # conservative: next profiled batch size above bs
@@ -252,3 +259,13 @@ def reserve(result: ProbeResult) -> None:
     """Algorithm 2, reserve(): commit every interval returned by probe()."""
     for r in result.reservations:
         r.resource.reserve(r.start, r.dur)
+
+
+def cancel(result: ProbeResult) -> None:
+    """Undo reserve(): release every interval a probe committed.
+
+    Used by the data plane when a dispatched batch cannot execute (executor
+    failure) so its reserved capacity is returned to the pool.
+    """
+    for r in result.reservations:
+        r.resource.release(r.start, r.dur)

@@ -46,11 +46,20 @@ class SchedulerStats:
 
 
 class ReservationScheduler:
-    """PPipe's data-plane scheduler (Algorithm 1)."""
+    """PPipe's data-plane scheduler (Algorithm 1).
 
-    def __init__(self, runtime: ClusterRuntime) -> None:
+    `queues` may be any mapping of model name to a deque-compatible object
+    (append / popleft / len / [0]).  The discrete-event simulator uses plain
+    FIFO deques; the real data plane (repro.dataplane) injects its
+    admission-controlled, deadline-ordered queues — either way THIS class is
+    the single Algorithm 1 implementation driving both.
+    """
+
+    def __init__(self, runtime: ClusterRuntime, queues=None) -> None:
         self.runtime = runtime
-        self.queues: dict[str, deque[Request]] = {}
+        self.queues: dict[str, deque[Request]] = (
+            queues if queues is not None else {}
+        )
         self.stats = SchedulerStats()
         for p in runtime.pipelines:
             self.queues.setdefault(p.model_name, deque())
@@ -119,9 +128,11 @@ class ReactiveScheduler:
     deadline; network transfers queue FIFO on NICs without coordination, so
     contention (D3) emerges as queueing delay."""
 
-    def __init__(self, runtime: ClusterRuntime) -> None:
+    def __init__(self, runtime: ClusterRuntime, queues=None) -> None:
         self.runtime = runtime
-        self.queues: dict[str, deque[Request]] = {}
+        self.queues: dict[str, deque[Request]] = (
+            queues if queues is not None else {}
+        )
         self.stats = SchedulerStats()
         # actual availability times, maintained reactively (not reservations)
         self.vdev_free: dict[int, float] = {v.vdev_id: 0.0 for v in runtime.vdevs}

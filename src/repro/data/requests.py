@@ -15,9 +15,60 @@ All generators are deterministic per seed.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core.types import Request
+
+
+@dataclass(frozen=True)
+class TraceStats:
+    """Shape summary of an arrival trace (reported by the serving example and
+    BENCH_e2e.json so Poisson vs bursty runs are self-describing)."""
+
+    n: int
+    horizon_s: float
+    mean_rps: float
+    peak_rps: float  # max arrival rate over a sliding window
+    cv_interarrival: float  # coefficient of variation; ~1 Poisson, >1 bursty
+    slo_s: float  # mean request SLO
+
+    def as_dict(self) -> dict:
+        return {
+            "n": self.n,
+            "horizon_s": self.horizon_s,
+            "mean_rps": self.mean_rps,
+            "peak_rps": self.peak_rps,
+            "cv_interarrival": self.cv_interarrival,
+            "slo_s": self.slo_s,
+        }
+
+
+def describe(trace: list[Request], window_frac: float = 0.02) -> TraceStats:
+    """Empirical rate/burstiness statistics of a trace."""
+    if not trace:
+        return TraceStats(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    times = np.sort(np.array([r.arrival_s for r in trace]))
+    horizon = max(float(times[-1]), 1e-9)
+    window = max(horizon * window_frac, 1e-9)
+    # peak rate: most arrivals inside any window of `window` seconds
+    peak = 1
+    j = 0
+    for i in range(len(times)):
+        while times[i] - times[j] > window:
+            j += 1
+        peak = max(peak, i - j + 1)
+    gaps = np.diff(times)
+    cv = float(np.std(gaps) / np.mean(gaps)) if len(gaps) > 1 and np.mean(gaps) > 0 else 0.0
+    return TraceStats(
+        n=len(trace),
+        horizon_s=horizon,
+        mean_rps=len(trace) / horizon,
+        peak_rps=peak / window,
+        cv_interarrival=cv,
+        slo_s=float(np.mean([r.slo_s for r in trace])),
+    )
 
 
 def poisson_trace(

@@ -1,0 +1,24 @@
+"""repro.dataplane — the asynchronous reservation-driven serving data plane.
+
+Module layout (DESIGN.md section 3):
+  queues.py     per-model EDF queues, SLO-aware admission, drop policy
+  batcher.py    adaptive batching = the simulator's Algorithm 1, shared
+  dispatcher.py overlapped real JAX execution + feedback correction
+  metrics.py    SLO attainment / goodput / utilization / queue-delay telemetry
+  plane.py      the event loop tying them together + plan->executor builders
+"""
+
+from .batcher import AdaptiveBatcher, unloaded_latency_s  # noqa: F401
+from .dispatcher import (  # noqa: F401
+    CompletedBatch,
+    FeedbackController,
+    PoolDispatcher,
+)
+from .metrics import DispatchRecord, Telemetry  # noqa: F401
+from .plane import (  # noqa: F401
+    DataPlane,
+    build_executors,
+    calibrate_runtime,
+    serve_trace,
+)
+from .queues import AdmissionPolicy, ModelQueue, QueueSet  # noqa: F401

@@ -1,0 +1,72 @@
+"""Reservation-driven adaptive batching — Algorithm 1, shared with the sim.
+
+This module deliberately contains **no scheduling logic**.  The pipeline /
+path / batch-size decision (paper section 5.4, Algorithm 1) lives in
+`core.scheduler.ReservationScheduler`, the exact object the discrete-event
+simulator drives; the batcher's job is to own the admission-controlled
+queues (queues.py) and hand them to that scheduler, so that simulated and
+real execution provably follow one implementation (see the parity test in
+tests/test_dataplane.py).
+"""
+
+from __future__ import annotations
+
+from repro.core.reservation import PipelineRuntime
+from repro.core.runtime import ClusterRuntime
+from repro.core.scheduler import (  # noqa: F401  (re-exported action types)
+    Dispatch,
+    Drop,
+    ReservationScheduler,
+    SchedulerStats,
+    WaitUntil,
+)
+from repro.core.types import Request
+
+from .queues import AdmissionPolicy, QueueSet
+
+
+def unloaded_latency_s(pipeline: PipelineRuntime) -> float:
+    """Best-case end-to-end latency of a pipeline: batch 1 on idle pools.
+
+    Transfers are excluded — admission should err on the admitting side, and
+    co-located hops cost nothing anyway.
+    """
+    return sum(stage.latency(1) for stage in pipeline.stages)
+
+
+class AdaptiveBatcher:
+    """Admission-controlled queues + the shared Algorithm 1 scheduler."""
+
+    def __init__(self, runtime: ClusterRuntime,
+                 policy: AdmissionPolicy | None = None,
+                 scheduler_cls=ReservationScheduler) -> None:
+        self.runtime = runtime
+        min_service = {}
+        for p in runtime.pipelines:
+            lat = unloaded_latency_s(p)
+            cur = min_service.get(p.model_name)
+            min_service[p.model_name] = lat if cur is None else min(cur, lat)
+        self.queues = QueueSet(min_service, policy)
+        # the simulator's scheduler, pointed at our queues
+        self.sched = scheduler_cls(runtime, queues=self.queues.by_model)
+
+    # ------------------------------------------------------------------ api
+    def offer(self, req: Request, now: float) -> tuple[bool, list[Request]]:
+        """Admission front door; returns (admitted, overflow-shed requests)."""
+        return self.queues.offer(req, now)
+
+    def plan(self, model: str, now: float
+             ) -> tuple[list[Request], list[Dispatch | Drop | WaitUntil]]:
+        """One scheduling round: cheap expiry prune, then Algorithm 1.
+
+        Returns (expired requests dropped by the prune, scheduler actions).
+        """
+        expired = self.queues.prune(model, now)
+        return expired, self.sched.schedule(model, now)
+
+    def pending(self, model: str) -> int:
+        return self.queues.pending(model)
+
+    @property
+    def stats(self) -> SchedulerStats:
+        return self.sched.stats

@@ -1,0 +1,138 @@
+"""Data-plane telemetry: the paper's Fig. 8/9 metrics, live.
+
+Collected per serve() run: SLO attainment and goodput (Fig. 6/7/9), per-class
+temporal GPU utilization (Fig. 8), queue delay distribution, drop attribution
+(admission reject vs overflow shed vs expiry vs Algorithm-1 drop), adaptive
+batch-size history, measured stage wall times, and the dispatcher's in-flight
+high-water mark (proof that pool dispatch actually overlaps).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.runtime import ClusterRuntime, utilization_by_class
+from repro.core.types import RequestOutcome, attainment
+
+
+@dataclass
+class DispatchRecord:
+    """One Algorithm-1 dispatch decision (for batching-behaviour assertions)."""
+
+    t_s: float
+    pipeline_id: int
+    batch_size: int
+    planned_finish_s: float
+    oldest_deadline_s: float
+    queue_len_after: int
+
+
+@dataclass
+class Telemetry:
+    outcomes: list[RequestOutcome] = field(default_factory=list)
+    queue_delay_s: list[float] = field(default_factory=list)
+    dispatches: list[DispatchRecord] = field(default_factory=list)
+    admission_rejects: int = 0
+    overflow_sheds: int = 0
+    expiry_drops: int = 0
+    sched_drops: int = 0
+    exec_failures: int = 0
+    inflight_hwm: int = 0
+    probes_per_dispatch: float = 0.0
+    horizon_s: float = 0.0
+    # measured wall seconds per (pipeline_id, stage_idx), real execution only
+    stage_wall_s: dict = field(default_factory=dict)
+    batch_wall_s: list[float] = field(default_factory=list)
+    utilization: dict = field(default_factory=dict)
+    feedback_scales: dict = field(default_factory=dict)
+
+    # ----------------------------------------------------------- aggregates
+    @property
+    def attainment(self) -> float:
+        return attainment(self.outcomes)
+
+    @property
+    def served(self) -> int:
+        return sum(1 for o in self.outcomes if o.completion_s is not None)
+
+    @property
+    def dropped(self) -> int:
+        return sum(1 for o in self.outcomes if o.completion_s is None)
+
+    @property
+    def goodput_rps(self) -> float:
+        """Requests completed within SLO per second (paper's goodput)."""
+        ok = sum(1 for o in self.outcomes if o.ok)
+        return ok / max(self.horizon_s, 1e-9)
+
+    @property
+    def mean_batch_size(self) -> float:
+        if not self.dispatches:
+            return 0.0
+        return float(np.mean([d.batch_size for d in self.dispatches]))
+
+    def queue_delay_pct(self, q: float) -> float:
+        if not self.queue_delay_s:
+            return 0.0
+        return float(np.percentile(self.queue_delay_s, q))
+
+    # -------------------------------------------------------------- finish
+    def finalize(self, runtime: ClusterRuntime) -> None:
+        """Freeze end-of-run aggregates derived from the cluster runtime."""
+        self.utilization = utilization_by_class(runtime, max(self.horizon_s, 1e-9))
+        self.feedback_scales = {
+            (p.pipeline_id, si): s.lat_scale
+            for p in runtime.pipelines
+            for si, s in enumerate(p.stages)
+            if abs(s.lat_scale - 1.0) > 1e-12
+        }
+
+    def snapshot(self) -> dict:
+        """JSON-able summary (consumed by BENCH_e2e.json and the example)."""
+        walls = {
+            f"p{pid}s{si}": {
+                "n": len(v),
+                "mean_ms": float(np.mean(v)) * 1e3,
+                "p99_ms": float(np.percentile(v, 99)) * 1e3,
+            }
+            for (pid, si), v in self.stage_wall_s.items() if v
+        }
+        return {
+            "requests": len(self.outcomes),
+            "served": self.served,
+            "dropped": self.dropped,
+            "attainment": self.attainment,
+            "goodput_rps": self.goodput_rps,
+            "horizon_s": self.horizon_s,
+            "mean_batch_size": self.mean_batch_size,
+            "dispatches": len(self.dispatches),
+            "probes_per_dispatch": self.probes_per_dispatch,
+            "queue_delay_p50_ms": self.queue_delay_pct(50) * 1e3,
+            "queue_delay_p99_ms": self.queue_delay_pct(99) * 1e3,
+            "drops": {
+                "admission_reject": self.admission_rejects,
+                "overflow_shed": self.overflow_sheds,
+                "expired": self.expiry_drops,
+                "scheduler": self.sched_drops,
+                "exec_failure": self.exec_failures,
+            },
+            "inflight_hwm": self.inflight_hwm,
+            "utilization_by_class": dict(self.utilization),
+            "stage_wall": walls,
+            "feedback_scales": {f"p{p}s{s}": v
+                                for (p, s), v in self.feedback_scales.items()},
+        }
+
+    def summary(self) -> str:
+        s = self.snapshot()
+        util = ", ".join(f"{c}={u:.1%}" for c, u in s["utilization_by_class"].items())
+        return (
+            f"served {s['served']}/{s['requests']} "
+            f"(attainment {s['attainment']:.1%}, goodput {s['goodput_rps']:.1f} rps) "
+            f"in {s['dispatches']} batches (mean bs {s['mean_batch_size']:.2f}); "
+            f"queue delay p50/p99 {s['queue_delay_p50_ms']:.2f}/"
+            f"{s['queue_delay_p99_ms']:.2f} ms; drops {s['drops']}; "
+            f"util {util or 'n/a'}; inflight hwm {s['inflight_hwm']}"
+        )

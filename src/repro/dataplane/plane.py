@@ -1,0 +1,378 @@
+"""The event-driven serving data plane (DESIGN.md section 3).
+
+`DataPlane.serve(trace)` replays a request trace through the full PPipe
+stack: admission-controlled queues (queues.py) -> the shared Algorithm 1
+scheduler (batcher.py) -> reservation-driven stage/transfer execution with
+overlapped real JAX dispatch (dispatcher.py) -> telemetry (metrics.py).
+
+Scheduling runs on a *virtual* clock in trace seconds — the latency model
+prices TPU pools, and arrival timestamps/SLOs live on that axis — while the
+dispatcher executes batches for real in wall time underneath.  The two clocks
+meet in `FeedbackController`: measured wall durations are calibrated into
+virtual seconds and, in ``feedback="measured"`` mode, replace the planned
+stage durations (the role lognormal noise plays in the simulator) and
+re-synchronize the reservation timelines via `Timeline.correct`.
+
+The virtual execution mechanics (stage start = max(planned start, batch
+clock, device free), NIC FIFO resolution, feedback `correct()` calls) mirror
+`core.simulator.Simulator` one-for-one on purpose: with a permissive
+admission policy, planned feedback and zero noise the two must produce
+bit-identical outcomes — tests/test_dataplane.py proves it, which is what
+lets one control-plane plan and one scheduler drive both worlds.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+
+from repro.core import reservation
+from repro.core.plan import ClusterPlan
+from repro.core.runtime import ClusterRuntime
+from repro.core.scheduler import Dispatch, Drop, WaitUntil
+from repro.core.types import Request, RequestOutcome
+
+from .batcher import AdaptiveBatcher
+from .dispatcher import FeedbackController, PoolDispatcher
+from .metrics import DispatchRecord, Telemetry
+from .queues import AdmissionPolicy
+
+
+@dataclass
+class _Job:
+    job_id: int
+    pipeline_id: int
+    requests: list[Request]
+    probe: reservation.ProbeResult
+    exec_id: int | None  # dispatcher job id (None when no real execution)
+    stage_idx: int = 0
+    clock: float = 0.0  # virtual time the batch finished its previous hop
+
+
+def _default_tokens(n: int, seq_len: int):
+    """Batch-bucketed dummy tokens: pad the batch to the next power of two so
+    the number of compiled program shapes stays logarithmic in batch size."""
+    import jax.numpy as jnp
+
+    bucket = 1
+    while bucket < n:
+        bucket *= 2
+    return jnp.ones((bucket, seq_len), jnp.int32)
+
+
+class DataPlane:
+    """Asynchronous reservation-driven serving engine."""
+
+    ARRIVAL, WAKE, STAGE_DONE, XFER_DONE = range(4)
+
+    def __init__(
+        self,
+        runtime: ClusterRuntime,
+        dispatcher: PoolDispatcher | None = None,
+        policy: AdmissionPolicy | None = None,
+        feedback: str = "planned",
+        seq_len: int = 32,
+        token_fn=None,
+        feedback_alpha: float = 0.4,
+    ) -> None:
+        if feedback not in ("planned", "measured"):
+            raise ValueError(f"feedback must be planned|measured, got {feedback!r}")
+        if feedback == "measured" and dispatcher is None:
+            raise ValueError("measured feedback requires a dispatcher")
+        self.rt = runtime
+        self.batcher = AdaptiveBatcher(runtime, policy)
+        self.dispatcher = dispatcher
+        self.feedback = feedback
+        self.seq_len = seq_len
+        self.token_fn = token_fn or _default_tokens
+        self.fb = (
+            FeedbackController(runtime, alpha=feedback_alpha,
+                               adapt_latency=feedback == "measured")
+            if dispatcher is not None else None
+        )
+        self.tel = Telemetry()
+        self.events: list[tuple[float, int, int, object]] = []
+        self.seq = itertools.count()
+        self.jobs: dict[int, _Job] = {}
+        self.job_ids = itertools.count()
+        self.vdev_virtual_free: dict[int, float] = {
+            v.vdev_id: 0.0 for v in runtime.vdevs
+        }
+        self.nic_ul_free: dict[int, float] = {n.node_id: 0.0 for n in runtime.nodes}
+        self.nic_dl_free: dict[int, float] = {n.node_id: 0.0 for n in runtime.nodes}
+        self._wakes: dict[str, float] = {}
+
+    # ------------------------------------------------------------------ events
+    def push(self, t: float, kind: int, payload: object) -> None:
+        heapq.heappush(self.events, (t, next(self.seq), kind, payload))
+
+    def serve(self, trace: list[Request]) -> Telemetry:
+        trace = sorted(trace)
+        for req in trace:
+            self.push(req.arrival_s, self.ARRIVAL, req)
+        horizon = trace[-1].arrival_s if trace else 0.0
+        last_gc = 0.0
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if kind == self.ARRIVAL:
+                self._on_arrival(t, payload)
+            elif kind == self.WAKE:
+                self._wakes.pop(payload, None)
+                self._run_scheduler(payload, t)
+            elif kind == self.STAGE_DONE:
+                self._on_stage_done(t, payload)
+            elif kind == self.XFER_DONE:
+                self._on_xfer_done(t, payload)
+            if t - last_gc > 1.0:
+                self.rt.gc(t)
+                last_gc = t
+            horizon = max(horizon, t)
+        self.tel.horizon_s = max(horizon, 1e-9)
+        self.tel.probes_per_dispatch = self.batcher.stats.probes_per_dispatch
+        self._harvest_measurements()
+        self.tel.finalize(self.rt)
+        return self.tel
+
+    # --------------------------------------------------------------- arrivals
+    def _on_arrival(self, t: float, req: Request) -> None:
+        admitted, shed = self.batcher.offer(req, t)
+        if not admitted:
+            self.tel.admission_rejects += 1
+            self._drop(req)
+        for r in shed:
+            self.tel.overflow_sheds += 1
+            self._drop(r)
+        self._run_scheduler(req.model_name, t)
+
+    # --------------------------------------------------------------- scheduler
+    def _run_scheduler(self, model: str, now: float) -> None:
+        expired, actions = self.batcher.plan(model, now)
+        for r in expired:
+            self.tel.expiry_drops += 1
+            self._drop(r)
+        for action in actions:
+            if isinstance(action, Drop):
+                self.tel.sched_drops += 1
+                self._drop(action.request)
+            elif isinstance(action, WaitUntil):
+                # coalesce wake-ups per model
+                cur = self._wakes.get(model)
+                if cur is None or action.time_s < cur - 1e-9:
+                    self._wakes[model] = action.time_s
+                    self.push(action.time_s, self.WAKE, model)
+            elif isinstance(action, Dispatch):
+                self._dispatch(now, action)
+
+    def _dispatch(self, now: float, action: Dispatch) -> None:
+        pr = action.probe_result
+        exec_id = None
+        if self.dispatcher is not None:
+            tokens = self.token_fn(len(action.requests), self.seq_len)
+            try:
+                exec_id = self.dispatcher.submit(action, tokens)
+            except Exception:  # noqa: BLE001 — executor died: return capacity
+                reservation.cancel(pr)
+                self.tel.exec_failures += 1
+                for r in action.requests:
+                    self._drop(r)
+                return
+        # telemetry only for batches that actually execute
+        self.tel.dispatches.append(DispatchRecord(
+            t_s=now,
+            pipeline_id=action.pipeline.pipeline_id,
+            batch_size=len(action.requests),
+            planned_finish_s=pr.finish_time,
+            oldest_deadline_s=min(r.deadline_s for r in action.requests),
+            queue_len_after=self.batcher.pending(action.pipeline.model_name),
+        ))
+        self.tel.queue_delay_s.extend(now - r.arrival_s for r in action.requests)
+        job = _Job(
+            job_id=next(self.job_ids),
+            pipeline_id=action.pipeline.pipeline_id,
+            requests=action.requests,
+            probe=pr,
+            exec_id=exec_id,
+            clock=now,
+        )
+        self.jobs[job.job_id] = job
+        self._start_stage(now, job)
+
+    # -------------------------------------------------------------- execution
+    def _stage_dur(self, job: _Job, k: int) -> float:
+        """Virtual duration of stage k: planned, or calibrated-measured when
+        real execution feeds back (the data-plane analogue of sim noise)."""
+        planned = job.probe.stage_durs[k]
+        if self.feedback != "measured" or job.exec_id is None:
+            return planned
+        wall = self.dispatcher.poll_stage(job.exec_id, k)
+        return self.fb.observe(job.pipeline_id, k, planned, wall)
+
+    def _start_stage(self, now: float, job: _Job) -> None:
+        k = job.stage_idx
+        gpu = job.probe.path[k]
+        planned_start = job.probe.stage_starts[k]
+        planned_dur = job.probe.stage_durs[k]
+        start = max(planned_start, job.clock, self.vdev_virtual_free[gpu.vdev_id])
+        dur = self._stage_dur(job, k)
+        self.vdev_virtual_free[gpu.vdev_id] = start + dur
+        gpu.busy_s += dur
+        gpu.timeline.correct(planned_start, planned_dur, start, dur)
+        self.push(start + dur, self.STAGE_DONE, (job.job_id, start, dur))
+
+    def _on_stage_done(self, t: float, payload: tuple) -> None:
+        job_id, _, _ = payload
+        job = self.jobs[job_id]
+        job.clock = t
+        job.stage_idx += 1
+        if job.stage_idx >= len(job.probe.path):
+            self._complete(job, t)
+            return
+        k = job.stage_idx
+        src = job.probe.path[k - 1]
+        dst = job.probe.path[k]
+        pipeline = self.rt.pipelines[job.pipeline_id]
+        stage = pipeline.stages[k]
+        nbytes = stage.in_bytes_per_req * len(job.requests)
+        if src.node is dst.node or nbytes <= 0:
+            self._start_stage(t, job)
+            return
+        bw = min(src.node.nic_bw, dst.node.nic_bw)
+        dur = nbytes / bw
+        planned_start = job.probe.xfer_starts[k - 1]
+        planned_dur = job.probe.xfer_durs[k - 1]
+        start = max(
+            planned_start,
+            t,
+            self.nic_ul_free[src.node.node_id],
+            self.nic_dl_free[dst.node.node_id],
+        )
+        src.node.uplink.correct(planned_start, planned_dur, start, dur)
+        dst.node.downlink.correct(planned_start, planned_dur, start, dur)
+        self.nic_ul_free[src.node.node_id] = start + dur
+        self.nic_dl_free[dst.node.node_id] = start + dur
+        self.push(start + dur, self.XFER_DONE, job_id)
+
+    def _on_xfer_done(self, t: float, job_id: int) -> None:
+        job = self.jobs[job_id]
+        job.clock = t
+        self._start_stage(t, job)
+
+    def _complete(self, job: _Job, t: float) -> None:
+        for req in job.requests:
+            self.tel.outcomes.append(RequestOutcome(
+                req_id=req.req_id,
+                arrival_s=req.arrival_s,
+                deadline_s=req.deadline_s,
+                completion_s=t,
+                pipeline_id=job.pipeline_id,
+            ))
+        del self.jobs[job.job_id]
+
+    def _drop(self, req: Request) -> None:
+        self.tel.outcomes.append(RequestOutcome(
+            req_id=req.req_id,
+            arrival_s=req.arrival_s,
+            deadline_s=req.deadline_s,
+            completion_s=None,
+        ))
+
+    # -------------------------------------------------------------- wall side
+    def _harvest_measurements(self) -> None:
+        if self.dispatcher is None:
+            return
+        self.dispatcher.drain_all()
+        for c in self.dispatcher.take_completed():
+            self.tel.batch_wall_s.append(c.total_wall_s)
+            for si, w in enumerate(c.stage_wall_s):
+                self.tel.stage_wall_s.setdefault((c.pipeline_id, si), []).append(w)
+        self.tel.inflight_hwm = max(self.tel.inflight_hwm,
+                                    self.dispatcher.inflight_hwm)
+
+
+def serve_trace(
+    runtime: ClusterRuntime,
+    trace: list[Request],
+    dispatcher: PoolDispatcher | None = None,
+    policy: AdmissionPolicy | None = None,
+    feedback: str = "planned",
+    seq_len: int = 32,
+    token_fn=None,
+) -> Telemetry:
+    """One-shot helper: build a DataPlane and serve `trace` through it."""
+    dp = DataPlane(runtime, dispatcher=dispatcher, policy=policy,
+                   feedback=feedback, seq_len=seq_len, token_fn=token_fn)
+    return dp.serve(trace)
+
+
+# ----------------------------------------------------------------------------
+# Builders: PipelinePlan -> real executors (the MILP -> execution hand-off)
+# ----------------------------------------------------------------------------
+
+
+def build_executors(cfg, plan: ClusterPlan, layer_block_map, key,
+                    quantize_boundary: bool = True):
+    """Materialize every pipeline of a ClusterPlan as jitted StageExecutors.
+
+    Partitions with identical block ranges (common across pooled pipelines of
+    the same model) share one compiled executor; parameters are initialized
+    once and shared — on a single host all pool members are co-resident.
+    Returns {pipeline_id: [StageExecutor per stage]}.
+    """
+    from repro.serving.engine import StageExecutor, split_stages
+
+    ranges = sorted({(s.block_start, s.block_end)
+                     for pp in plan.pipelines for s in pp.stages})
+    model, fns = split_stages(cfg, list(ranges), layer_block_map)
+    params = model.init(key)
+    ex_by_range = {
+        r: StageExecutor(stage_fn=fn, params=params,
+                         quantize_boundary=quantize_boundary)
+        for r, fn in zip(ranges, fns)
+    }
+    return {
+        pid: [ex_by_range[(s.block_start, s.block_end)] for s in pp.stages]
+        for pid, pp in enumerate(plan.pipelines)
+    }
+
+
+def calibrate_runtime(runtime: ClusterRuntime, executors_by_pipeline,
+                      seq_len: int, batch_sizes=None, reps: int = 2,
+                      token_fn=None) -> dict:
+    """Offline profiling pass (the paper's section 5.1 profiler, for real):
+    measure each stage at each batch size and overwrite the analytic
+    latency tables with measured wall seconds, so the scheduler's virtual
+    clock *is* the wall clock and SLOs/deadlines become physically meaningful.
+
+    Returns {(pipeline_id, stage_idx, batch): seconds} for reporting.
+    """
+    import time
+
+    import jax
+
+    token_fn = token_fn or _default_tokens
+    measured: dict = {}
+    for p in runtime.pipelines:
+        execs = executors_by_pipeline[p.pipeline_id]
+        bss = batch_sizes or sorted({1, 2, 4, 8, p.unified_batch})
+        bss = [b for b in bss if b <= p.unified_batch] or [p.unified_batch]
+        per_stage: list[dict[int, float]] = [dict() for _ in execs]
+        for bs in bss:
+            tokens = token_fn(bs, seq_len)
+            for _ in range(reps):
+                carry = tokens
+                for si, ex in enumerate(execs):
+                    if si > 0:
+                        carry = ex.transfer(carry)
+                    t0 = time.perf_counter()
+                    carry = ex(carry)
+                    jax.block_until_ready(carry)
+                    dt = time.perf_counter() - t0
+                    cur = per_stage[si].get(bs)
+                    per_stage[si][bs] = dt if cur is None else min(cur, dt)
+        for si, stage in enumerate(p.stages):
+            stage.latency_by_batch = dict(per_stage[si])
+            stage.lat_scale = 1.0
+            for bs, dt in per_stage[si].items():
+                measured[(p.pipeline_id, si, bs)] = dt
+    return measured

@@ -1,0 +1,175 @@
+"""Per-model request queues with SLO-aware admission control.
+
+The queue is the data plane's front door (DESIGN.md section 3).  Three drop
+mechanisms exist, each counted separately so telemetry can attribute loss:
+
+* **admission reject** — a request whose deadline cannot be met even by an
+  unloaded pipeline (arrival + best-case batch-1 latency > deadline) is
+  refused at arrival; queueing it would only waste probe calls.
+* **overflow shed** — when a depth bound is set, arrivals beyond it shed work
+  in deadline order from the *head*: under backlog the earliest deadlines are
+  the ones that will be missed, so shedding them preserves the attainable tail
+  (classic EDF overload behaviour).
+* **expiry prune** — before each scheduling round, queued requests whose
+  deadline has become unreachable are dropped without paying for a probe.
+
+Queues are kept ordered by deadline (EDF) and expose the deque interface
+(`append` / `popleft` / `[0]` / `len`) that Algorithm 1
+(`core.scheduler.ReservationScheduler`) manipulates, so the simulator's
+scheduler runs unmodified on top of them.
+"""
+
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+
+from repro.core.types import Request
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """Knobs for ModelQueue admission/drop behaviour."""
+
+    max_depth: int | None = None  # per-model queue bound; None = unbounded
+    feasibility_check: bool = True  # reject hopeless requests at arrival
+    prune_expired: bool = True  # drop unreachable deadlines pre-scheduling
+    edf_order: bool = True  # False = plain FIFO (the simulator's order)
+    slack_eps_s: float = 1e-9
+
+    @classmethod
+    def permissive(cls) -> "AdmissionPolicy":
+        """Pass-through policy: no admission, no drops, FIFO order — the
+        queue behaves exactly like the simulator's deque, making data-plane
+        outcomes bit-identical to the simulator's (the parity test).  EDF
+        order is a data-plane improvement over the simulator and only
+        coincides with FIFO when every request of a model shares one SLO."""
+        return cls(max_depth=None, feasibility_check=False,
+                   prune_expired=False, edf_order=False)
+
+
+class ModelQueue:
+    """Deadline-ordered (EDF; FIFO if `policy.edf_order` is off) request
+    queue for one model."""
+
+    __slots__ = ("model_name", "policy", "min_service_s", "_deadlines", "_reqs",
+                 "admitted", "rejected", "shed", "expired")
+
+    def __init__(self, model_name: str, policy: AdmissionPolicy,
+                 min_service_s: float = 0.0) -> None:
+        self.model_name = model_name
+        self.policy = policy
+        # unloaded best-case latency of the fastest pipeline at batch 1:
+        # the feasibility bound used for admission and expiry.
+        self.min_service_s = min_service_s
+        self._deadlines: list[float] = []
+        self._reqs: list[Request] = []
+        self.admitted = 0
+        self.rejected = 0
+        self.shed = 0
+        self.expired = 0
+
+    # ---------------------------------------------------- deque interface
+    # (what Algorithm 1 in core.scheduler uses — keep in sync with deque)
+    def append(self, req: Request) -> None:
+        if self.policy.edf_order:
+            i = bisect.bisect_right(self._deadlines, req.deadline_s)
+        else:
+            i = len(self._deadlines)
+        self._deadlines.insert(i, req.deadline_s)
+        self._reqs.insert(i, req)
+
+    def popleft(self) -> Request:
+        self._deadlines.pop(0)
+        return self._reqs.pop(0)
+
+    def __len__(self) -> int:
+        return len(self._reqs)
+
+    def __getitem__(self, i: int) -> Request:
+        return self._reqs[i]
+
+    # ------------------------------------------------------ admission path
+    def offer(self, req: Request, now: float) -> tuple[bool, list[Request]]:
+        """Admission-controlled enqueue.
+
+        Returns (admitted, shed): whether `req` entered the queue, plus any
+        queued requests shed to respect the depth bound.
+        """
+        p = self.policy
+        if p.feasibility_check and now + self.min_service_s > req.deadline_s + p.slack_eps_s:
+            self.rejected += 1
+            return False, []
+        self.append(req)
+        self.admitted += 1
+        dropped: list[Request] = []
+        if p.max_depth is not None:
+            while len(self._reqs) > p.max_depth:
+                dropped.append(self.popleft())  # earliest deadline goes first
+                self.shed += 1
+        return True, dropped
+
+    def prune(self, now: float) -> list[Request]:
+        """Drop, in deadline order, every head whose deadline is unreachable."""
+        if not self.policy.prune_expired:
+            return []
+        out: list[Request] = []
+        eps = self.policy.slack_eps_s
+        while self._reqs and now + self.min_service_s > self._deadlines[0] + eps:
+            out.append(self.popleft())
+            self.expired += 1
+        return out
+
+
+class QueueSet:
+    """All per-model queues of one data plane + aggregate counters."""
+
+    def __init__(self, min_service_s: dict[str, float],
+                 policy: AdmissionPolicy | None = None) -> None:
+        self.policy = policy or AdmissionPolicy()
+        self.by_model: dict[str, ModelQueue] = {
+            m: ModelQueue(m, self.policy, s) for m, s in min_service_s.items()
+        }
+
+    def queue(self, model: str) -> ModelQueue:
+        q = self.by_model.get(model)
+        if q is None:
+            q = self.by_model[model] = ModelQueue(model, self.policy)
+        return q
+
+    def offer(self, req: Request, now: float) -> tuple[bool, list[Request]]:
+        q = self.by_model.get(req.model_name)
+        if q is None:
+            # no pipeline serves this model: with admission control on, the
+            # request is infeasible by definition (otherwise it would sit in a
+            # queue no scheduler ever services and silently lose its outcome)
+            q = self.queue(req.model_name)
+            if self.policy.feasibility_check:
+                q.rejected += 1
+                return False, []
+        return q.offer(req, now)
+
+    def prune(self, model: str, now: float) -> list[Request]:
+        return self.queue(model).prune(now)
+
+    def pending(self, model: str) -> int:
+        return len(self.by_model.get(model, ()))
+
+    def _total(self, attr: str) -> int:
+        return sum(getattr(q, attr) for q in self.by_model.values())
+
+    @property
+    def admitted(self) -> int:
+        return self._total("admitted")
+
+    @property
+    def rejected(self) -> int:
+        return self._total("rejected")
+
+    @property
+    def shed(self) -> int:
+        return self._total("shed")
+
+    @property
+    def expired(self) -> int:
+        return self._total("expired")

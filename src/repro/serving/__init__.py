@@ -1,1 +1,7 @@
-from .engine import ServingEngine, StageExecutor, split_stages  # noqa: F401
+from .engine import (  # noqa: F401
+    ServingEngine,
+    StageExecutor,
+    build_engine,
+    layer_block_map_from_profile,
+    split_stages,
+)

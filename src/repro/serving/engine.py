@@ -1,11 +1,15 @@
-"""Serving engine: executes MILP plans with real JAX stage computation.
+"""Stage-split execution: the compute leaf of the serving data plane.
 
-This is the prototype data plane (paper section 6): the discrete-event
-simulator models large clusters; this engine actually *runs* the pooled
-pipelines on local devices, demonstrating that a PipelinePlan is executable —
-partitions are materialized as jitted per-stage functions over block ranges,
-boundary activations are quantized (boundary_quant kernel) before transfer,
-and the reservation scheduler drives dispatch in wall-clock time.
+The control plane (MILP) emits a PipelinePlan; this module materializes its
+partitions as jitted per-stage functions over block ranges so they can
+actually *run* on local devices — boundary activations are quantized
+(boundary_quant kernel) before cross-device transfer, mirroring the paper's
+fp32->fp16 trick (section 6 / DESIGN.md section 6).
+
+Scheduling, admission and overlapped dispatch live in `repro.dataplane`
+(DESIGN.md section 3); this file only knows how to compute a stage.
+`ServingEngine` remains as a thin synchronous wrapper used by older tests and
+quickstarts — new code should drive `repro.dataplane.DataPlane`.
 
 Stage splitting maps a model's block graph onto partitions:
   block 0           = embedding (+ modality frontend)
@@ -25,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import PipelinePlan
-from repro.core.types import Request
+from repro.core.types import ModelProfile, Request
 from repro.kernels.boundary_quant import ops as bq_ops
 from repro.models import transformer as tfm
 from repro.models.common import ModelConfig, NO_SHARDING, rms_norm
@@ -74,13 +78,36 @@ def split_stages(cfg: ModelConfig, block_ranges: list[tuple[int, int]],
     return model, [make_stage(i, j) for i, j in block_ranges]
 
 
+def layer_block_map_from_profile(profile: ModelProfile, n_layers: int
+                                 ) -> list[tuple[int, int]]:
+    """Map a ModelProfile's blocks to the (layer_start, layer_end) ranges
+    `split_stages` expects.
+
+    Profiles are built from `model_zoo.layer_costs`, whose cost index 0 is the
+    embedding and index L+1 the head; model layer k lives at cost index k+1.
+    Embedding/unembedding are implied by block position (first/last), so the
+    map only carries sequence-layer ranges, clamped into [0, n_layers].
+    """
+    def clamp(i: int) -> int:
+        return max(0, min(n_layers, i))
+
+    return [(clamp(b.layer_start - 1), clamp(b.layer_end - 1))
+            for b in profile.blocks]
+
+
 @dataclass
 class StageExecutor:
-    """One pool member: a jitted stage function bound to its partition params."""
+    """One partition pool: a jitted stage function bound to its params.
+
+    On a single host all pool members are co-resident, so one executor (one
+    compiled program) serves the whole pool; member identity only matters to
+    the reservation scheduler, which tracks per-vdev timelines.
+    """
 
     stage_fn: Callable
     params: dict
     quantize_boundary: bool = True
+    device: Any = None  # target jax.Device; None = process default
     _jitted: Callable | None = None
 
     def __post_init__(self):
@@ -91,18 +118,31 @@ class StageExecutor:
         return out
 
     def transfer(self, x: jax.Array) -> jax.Array:
-        """Boundary transfer: int8-quantize, (move), dequantize — the paper's
-        fp32->fp16 trick, one step further (section 6 / DESIGN.md)."""
-        if not self.quantize_boundary or x.dtype == jnp.int32:
-            return x
+        """Boundary transfer into this stage: int8-quantize on the sender,
+        move, dequantize on the receiver (paper section 6 / DESIGN.md).
+
+        Skipped for any integer carry (token ids and other index tensors are
+        exact already) and when sender and receiver share a device — the
+        quantize->dequantize round-trip without a wire in between is pure
+        overhead and pure error.
+        """
+        target = self.device or jax.devices()[0]
+        src_devices = x.devices() if hasattr(x, "devices") else {target}
+        if src_devices == {target}:
+            return x  # co-resident: nothing to move, nothing to compress
+        if not self.quantize_boundary or jnp.issubdtype(x.dtype, jnp.integer):
+            return jax.device_put(x, target)
         q, scale = bq_ops.quantize(x)
+        q = jax.device_put(q, target)
+        scale = jax.device_put(scale, target)
         return bq_ops.dequantize(q, scale, x.dtype)
 
 
 @dataclass
 class ServingEngine:
-    """Executes batches through the staged pipeline; used by the e2e example
-    and integration tests (single-host: pools are co-resident executors)."""
+    """Synchronous wrapper kept for quickstarts/back-compat; `serve()` routes
+    through the data plane's PoolDispatcher so batches overlap across stages
+    instead of running one at a time (single-host: pools are co-resident)."""
 
     cfg: ModelConfig
     pipeline: PipelinePlan
@@ -125,23 +165,27 @@ class ServingEngine:
 
     def serve(self, requests: list[Request], batch_size: int | None = None,
               seq_len: int = 128) -> dict:
-        """Batch + run requests; returns latency stats (wall-clock)."""
+        """Batch + run requests with overlapped dispatch; returns wall-clock
+        latency stats plus the in-flight high-water mark."""
+        from repro.dataplane.dispatcher import PoolDispatcher
+
         bs = batch_size or self.pipeline.batch_size
-        lat = []
-        done = 0
+        disp = PoolDispatcher({0: [pool[0] for pool in self.executors]})
+        submits: list[tuple[int, float, int]] = []
         for i in range(0, len(requests), bs):
             chunk = requests[i : i + bs]
             tokens = jnp.ones((len(chunk), seq_len), jnp.int32)
-            t0 = time.perf_counter()
-            out = self.infer(tokens)
-            jax.block_until_ready(out)
-            lat.append(time.perf_counter() - t0)
-            done += len(chunk)
+            job_id = disp.submit_chain(0, tokens)
+            submits.append((job_id, time.perf_counter(), len(chunk)))
+        done = disp.drain_all()
+        by_job = {c.job_id: c for c in done}
+        lat = [by_job[j].done_wall - t0 for j, t0, _ in submits if j in by_job]
         return {
-            "served": done,
-            "batches": len(lat),
+            "served": sum(n for _, _, n in submits),
+            "batches": len(submits),
             "mean_batch_latency_s": float(np.mean(lat)) if lat else 0.0,
             "p99_batch_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "inflight_hwm": disp.inflight_hwm,
         }
 
 
@@ -152,6 +196,8 @@ def build_engine(cfg: ModelConfig, pipeline: PipelinePlan,
     params = model.init(key)
     executors = []
     for sp, fn in zip(pipeline.stages, stage_fns):
-        pool = [StageExecutor(stage_fn=fn, params=params) for _ in range(sp.n_vdev)]
-        executors.append(pool)
+        # one compiled executor shared by every co-resident pool member
+        # (per-member jits would re-trace the identical partition n_vdev times)
+        shared = StageExecutor(stage_fn=fn, params=params)
+        executors.append([shared] * sp.n_vdev)
     return ServingEngine(cfg=cfg, pipeline=pipeline, executors=executors)

@@ -1,7 +1,7 @@
 """Timeline + probe()/reserve() (paper Algorithm 2)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core.reservation import (
     NodeRes,
