@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
 from repro.data.requests import poisson_trace

@@ -19,11 +19,18 @@ import json
 import time
 from pathlib import Path
 
-from repro.core.baselines import plan_dart_r, plan_np
-from repro.core.enumerate import plan_cluster
+from repro.controlplane import (
+    Objective,
+    Planner,
+    ProfileStore,
+    ReplanConfig,
+    ReplanLoop,
+)
+from repro.core import plan_cluster, plan_dart_r, plan_np
 from repro.core.runtime import build_runtime
+from repro.core.types import replace
 from repro.data.requests import describe, multi_model_trace
-from repro.dataplane import serve_trace
+from repro.dataplane import DataPlane, serve_trace
 
 from .common import GROUPS, HC_LARGE, HC_SMALL, make_setup, max_load_factor
 
@@ -94,6 +101,86 @@ def run(group="G1", cluster_name="HC1-L", bursty=False, quick=False):
     return rows
 
 
+def _shifted_mix_trace(rates_a, rates_b, half_s, slos, seed=0):
+    """Arrival trace whose model mix flips at t = half_s (workload drift)."""
+    first = multi_model_trace(rates_a, half_s, slos, seed=seed)
+    second = [
+        replace(r, arrival_s=r.arrival_s + half_s,
+                deadline_s=r.deadline_s + half_s,
+                req_id=r.req_id + 100_000_000)
+        for r in multi_model_trace(rates_b, half_s, slos, seed=seed + 17)
+    ]
+    return sorted(first + second)
+
+
+def run_drift(cluster_name="HC1-S", quick=False, seed=0):
+    """Static plan vs. online re-planning under a mid-trace mix shift.
+
+    The plan is solved for an A-dominant mix; halfway through the trace the
+    mix flips to B-dominant.  The static run keeps serving on the stale plan;
+    the re-planned run carries a `ReplanLoop` whose drift monitor detects the
+    flip, re-solves through the Planner facade at the observed mix, and
+    installs the new plan with a live `swap_plan` (no in-flight drops).
+    """
+    cluster = HC_SMALL[cluster_name]
+    archs = GROUPS["G1"][:2]
+    a, b = archs
+    profiles, tables = make_setup(archs, cluster)
+    store = ProfileStore(cluster)
+    for name in archs:
+        store.add(profiles[name], tables[name])
+    planner = Planner(objective=Objective(slo_margin=0.4))
+    mix_a = {a: 0.85, b: 0.15}
+    mix_b = {a: 0.15, b: 0.85}
+    plan0 = planner.plan(profiles, tables, cluster,
+                         objective=planner.objective.with_weights(mix_a))
+    rate = plan0.throughput * 0.8
+    slos = {m: profiles[m].slo_s for m in archs}
+    half = 2.0 if quick else 4.0
+    rates_a = {m: rate * mix_a[m] for m in archs}
+    rates_b = {m: rate * mix_b[m] for m in archs}
+    trace = _shifted_mix_trace(rates_a, rates_b, half, slos, seed=seed)
+
+    t0 = time.perf_counter()
+    tel_static = serve_trace(build_runtime(plan0, profiles), trace)
+    static_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    dp = DataPlane(build_runtime(plan0, profiles))
+    loop = ReplanLoop(
+        planner=planner, store=store, cluster=cluster, dataplane=dp,
+        config=ReplanConfig(window_s=0.5, check_interval_s=0.25,
+                            min_requests=12, mix_drift=0.25, max_swaps=2),
+    ).attach()
+    loop.set_baseline(rates_a)
+    tel_replan = dp.serve(trace)
+    replan_wall = time.perf_counter() - t0
+
+    def detail(tel):
+        return {
+            "attainment": tel.attainment,
+            "goodput_rps": tel.goodput_rps,
+            "served": tel.served,
+            "plan_swaps": tel.plan_swaps,
+            "utilization_by_class": dict(tel.utilization),
+        }
+
+    return {
+        "cluster": cluster_name,
+        "models": archs,
+        "mix_initial": mix_a,
+        "mix_shifted": mix_b,
+        "rate_rps": rate,
+        "horizon_s": 2 * half,
+        "trace": describe(trace).as_dict(),
+        "static": {**detail(tel_static), "wall_s": static_wall},
+        "replanned": {**detail(tel_replan), "wall_s": replan_wall},
+        "replan_events": len(loop.events),
+        "delta_attainment": tel_replan.attainment - tel_static.attainment,
+        "delta_goodput_rps": tel_replan.goodput_rps - tel_static.goodput_rps,
+    }
+
+
 def main(quick=False):
     out = []
     results = []
@@ -125,9 +212,18 @@ def main(quick=False):
                 f"ppipe_vs_np={100*(by['PPipe']-by['NP'])/max(by['NP'],1e-9):.1f}%;"
                 f"ppipe_vs_dart={100*(by['PPipe']-by['DART-r'])/max(by['DART-r'],1e-9):.1f}%"
             )
+    drift = run_drift(quick=quick)
+    out.append(
+        f"e2e_drift[{drift['cluster']}|{'->'.join(drift['models'])}],"
+        f"{(drift['static']['wall_s'] + drift['replanned']['wall_s'])*1e6:.0f},"
+        f"static_attain={drift['static']['attainment']:.3f};"
+        f"replanned_attain={drift['replanned']['attainment']:.3f};"
+        f"delta={drift['delta_attainment']:+.3f};"
+        f"swaps={drift['replanned']['plan_swaps']}"
+    )
     BENCH_JSON.write_text(json.dumps(
         {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
-         "rows": results}, indent=2))
+         "rows": results, "drift": drift}, indent=2))
     out.append(f"e2e_json,0,wrote={BENCH_JSON}")
     return out
 

@@ -11,8 +11,7 @@ from __future__ import annotations
 import time
 
 from repro.core import costmodel as cm
-from repro.core.enumerate import plan_cluster
-from repro.core.milp import solve_milp
+from repro.core import plan_cluster, solve_milp
 from repro.core.types import ClusterSpec
 
 from .common import make_setup, profile_for

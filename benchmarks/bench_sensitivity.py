@@ -2,8 +2,7 @@
 
 from __future__ import annotations
 
-from repro.core.baselines import plan_np
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster, plan_np
 from repro.core.types import ClusterSpec
 
 from .common import make_setup

@@ -3,8 +3,7 @@ framework at its own max sustainable load."""
 
 from __future__ import annotations
 
-from repro.core.baselines import plan_dart_r, plan_np
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster, plan_dart_r, plan_np
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
 from repro.data.requests import multi_model_trace

@@ -8,7 +8,6 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core import blocks, costmodel as cm
-from repro.core.enumerate import plan_cluster
 from repro.core.types import ClusterSpec, ModelProfile
 from repro.models.model_zoo import layer_costs
 

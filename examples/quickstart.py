@@ -13,8 +13,7 @@ sys.path.insert(0, "src")
 
 from repro.configs import get_config
 from repro.core import blocks, costmodel as cm
-from repro.core.baselines import plan_np
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster, plan_np
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
 from repro.core.types import ClusterSpec, replace

@@ -32,7 +32,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core import blocks, costmodel as cm
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster
 from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
 from repro.core.runtime import build_runtime
 from repro.core.types import ClusterSpec, replace

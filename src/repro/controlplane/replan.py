@@ -1,0 +1,233 @@
+"""Online re-planning: workload-drift detection + periodic re-solve + hot swap.
+
+The paper runs its MILP "periodically as the workload mix and rates shift"
+(sections 5, 6) — the slow cadence of the two-cadence system.  This module
+closes that loop over the live data plane:
+
+* `DriftMonitor` — sliding-window rate/mix estimators over the arrival
+  stream (the same stream `dataplane.metrics` attributes outcomes to);
+* `ReplanLoop`   — registered as a DataPlane arrival hook; every
+  `check_interval_s` of virtual time it compares the current window against
+  the baseline the active plan was solved for and, past the drift
+  thresholds, re-solves through the `Planner` facade (optionally at measured
+  `ProfileStore` speed) and installs the result via
+  `DataPlane.swap_plan` — in-flight batches finish on the old pools.
+
+Everything runs on the data plane's virtual clock, so the loop behaves
+identically under simulation replay and real serving.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+from repro.core.plan import ClusterPlan
+from repro.core.types import ClusterSpec, ModelProfile
+
+from .planner import Objective, Planner
+from .profiles import ProfileStore
+
+if TYPE_CHECKING:  # avoid importing jax via repro.dataplane at module load
+    from repro.dataplane.plane import DataPlane
+
+
+@dataclass(frozen=True)
+class ReplanConfig:
+    """Cadence and sensitivity of the slow control loop."""
+
+    window_s: float = 2.0  # sliding estimation window (virtual seconds)
+    check_interval_s: float = 0.5  # min spacing between drift checks
+    min_requests: int = 16  # don't estimate from thin air
+    rate_drift: float = 0.5  # relative total-rate change that triggers
+    mix_drift: float = 0.2  # total-variation distance of the model mix
+    source: str = "analytic"  # which ProfileStore tables price the re-solve
+    max_swaps: int | None = None  # safety bound (None = unbounded)
+    max_failures: int = 8  # disarm the loop after this many failed re-plans
+
+
+class DriftMonitor:
+    """Sliding-window arrival-rate and model-mix estimators."""
+
+    def __init__(self, window_s: float = 2.0) -> None:
+        self.window_s = window_s
+        self._arrivals: deque[tuple[float, str]] = deque()
+        self._start: float | None = None  # first observation ever
+
+    def observe(self, model: str, t: float) -> None:
+        if self._start is None:
+            self._start = t
+        self._arrivals.append((t, model))
+        self._evict(t)
+
+    def _evict(self, now: float) -> None:
+        w = self._arrivals
+        while w and w[0][0] < now - self.window_s:
+            w.popleft()
+
+    def count(self, now: float) -> int:
+        self._evict(now)
+        return len(self._arrivals)
+
+    def _effective_window(self, now: float) -> float:
+        """The stretch of time the window actually covers.  Early in a run
+        (now - first arrival < window_s) dividing by the full window would
+        underestimate rates ~2x and fake a rate drop, so use elapsed time."""
+        if self._start is None:
+            return self.window_s
+        return max(min(self.window_s, now - self._start), 1e-9)
+
+    def rates(self, now: float) -> dict[str, float]:
+        """Per-model arrival rate (rps) over the window."""
+        self._evict(now)
+        eff = self._effective_window(now)
+        counts: dict[str, int] = {}
+        for _, m in self._arrivals:
+            counts[m] = counts.get(m, 0) + 1
+        return {m: c / eff for m, c in counts.items()}
+
+    def mix(self, now: float) -> dict[str, float]:
+        """Normalized model mix over the window (sums to 1 when non-empty)."""
+        rates = self.rates(now)
+        total = sum(rates.values())
+        if total <= 0:
+            return {}
+        return {m: r / total for m, r in rates.items()}
+
+
+def mix_distance(a: dict[str, float], b: dict[str, float]) -> float:
+    """Total-variation distance between two model mixes (0..1)."""
+    keys = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(k, 0.0) - b.get(k, 0.0)) for k in keys)
+
+
+@dataclass
+class ReplanEvent:
+    t_s: float
+    rates: dict[str, float]
+    weights: dict[str, float]
+    throughput_rps: float
+
+
+@dataclass
+class ReplanLoop:
+    """The slow half of the two-cadence system, wired to a live DataPlane."""
+
+    planner: Planner
+    store: ProfileStore
+    cluster: ClusterSpec
+    dataplane: "DataPlane"
+    config: ReplanConfig = field(default_factory=ReplanConfig)
+    objective: Objective | None = None
+    dispatcher_factory: object = None  # factory(new_runtime) -> PoolDispatcher
+    events: list[ReplanEvent] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.monitor = DriftMonitor(self.config.window_s)
+        self._last_check = float("-inf")
+        self._baseline_rate: float | None = None
+        self._baseline_mix: dict[str, float] = {}
+        self.objective = self.objective or self.planner.objective
+        self.failed_replans: list[tuple[float, str]] = []  # full failure log
+        self._consecutive_failures = 0  # resets on every successful swap
+
+    # ---------------------------------------------------------------- wiring
+    def attach(self) -> "ReplanLoop":
+        """Register on the data plane's arrival stream; returns self."""
+        self.dataplane.arrival_hooks.append(self.on_arrival)
+        return self
+
+    def set_baseline(self, rates: dict[str, float]) -> None:
+        """Pin the workload the *current* plan was solved for."""
+        total = sum(rates.values())
+        self._baseline_rate = total
+        self._baseline_mix = (
+            {m: r / total for m, r in rates.items()} if total > 0 else {}
+        )
+
+    def on_arrival(self, req, now: float) -> None:
+        self.monitor.observe(req.model_name, now)
+        self.maybe_replan(now)
+
+    # ----------------------------------------------------------------- logic
+    def drifted(self, now: float) -> bool:
+        if self.monitor.count(now) < self.config.min_requests:
+            return False
+        rates = self.monitor.rates(now)
+        total = sum(rates.values())
+        if self._baseline_rate is None:
+            # first full window: adopt it as the baseline, no re-solve
+            self.set_baseline(rates)
+            return False
+        rate_rel = abs(total - self._baseline_rate) / max(self._baseline_rate, 1e-9)
+        mix_tv = mix_distance(self.monitor.mix(now), self._baseline_mix)
+        return rate_rel > self.config.rate_drift or mix_tv > self.config.mix_drift
+
+    def maybe_replan(self, now: float) -> ClusterPlan | None:
+        """Drift check at the configured cadence; re-solve + hot-swap on trip."""
+        if now - self._last_check < self.config.check_interval_s:
+            return None
+        self._last_check = now
+        if self.config.max_swaps is not None and len(self.events) >= self.config.max_swaps:
+            return None
+        if self._consecutive_failures >= self.config.max_failures:
+            return None  # circuit breaker: something is persistently wrong
+        if not self.drifted(now):
+            return None
+        return self.replan(now)
+
+    def replan(self, now: float) -> ClusterPlan | None:
+        """Unconditional re-solve at the observed mix, then swap_plan.
+
+        A control-loop failure must never take the serving loop down: any
+        exception from the solver or the swap (solver timeout with no
+        incumbent, invalid plan, missing dispatcher_factory in measured
+        mode) is recorded in `failed_replans` and the old plan keeps
+        serving.
+        """
+        rates = self.monitor.rates(now)
+        profiles = dict(self.store.profiles)
+        weights = {m: max(rates.get(m, 0.0), 1e-6) for m in profiles}
+        # measured source: re-price the fresh runtime BEFORE any carried
+        # request is re-admitted/scheduled, so probe()/reserve() agree with
+        # the solve from the first post-swap round
+        setup = (self.store.reprice_runtime
+                 if self.config.source == "measured" else None)
+        try:
+            plan = self.planner.plan(
+                profiles,
+                self.store.tables(self.config.source),
+                self.cluster,
+                objective=self.objective.with_weights(weights),
+            )
+            if not plan.pipelines:
+                # Infeasible at this workload: keep the old plan, but adopt
+                # the baseline and count the failure — otherwise the same
+                # drift re-runs the full solver every check_interval_s.
+                self.failed_replans.append((now, "infeasible: empty plan"))
+                self._consecutive_failures += 1
+                self.set_baseline(rates)
+                return None
+            self.dataplane.swap_plan(
+                plan, profiles, now,
+                dispatcher_factory=self.dispatcher_factory,
+                runtime_setup=setup,
+                slo_margin=self.objective.slo_margin,
+                reason=f"drift@{now:.3f}s",
+            )
+        except Exception as exc:  # noqa: BLE001 — keep serving the old plan
+            # Adopt the observed workload as the new baseline anyway: a
+            # deterministic failure (e.g. mis-wired dispatcher_factory) must
+            # not re-trip the same drift and re-run the solver every check.
+            self.failed_replans.append((now, repr(exc)))
+            self._consecutive_failures += 1
+            self.set_baseline(rates)
+            return None
+        self._consecutive_failures = 0
+        self.set_baseline(rates)
+        self.events.append(ReplanEvent(
+            t_s=now, rates=dict(rates), weights=weights,
+            throughput_rps=plan.throughput,
+        ))
+        return plan

@@ -1,0 +1,401 @@
+"""Scalable control plane: template enumeration + master ILP.
+
+The literal Appendix-A.2 MILP (milp.py) carries ~10^4-10^5 binaries at
+production sizes.  This module implements the equivalent two-level solve:
+
+ 1. Enumerate *pipeline templates*: (partition boundaries, accelerator class
+    per partition, unified batch size, vGPU fraction per partition), keeping
+    only SLO-feasible, Pareto-undominated ones.  In the full MILP each (l,d)
+    selects exactly one (v,b,i,j) tuple, so every full-MILP solution is a
+    selection of templates with device counts, and vice versa; the optima
+    coincide (cross-checked against milp.solve_milp in tests).
+
+ 2. Solve a small master problem: choose integer virtual-device counts
+    r_{t,d} and throughputs x_t <= X_{t,d} * r_{t,d}, maximizing total (or
+    min-normalized, for multi-model serving) throughput under per-class chip
+    budgets.  An LP over all templates selects candidate columns; an exact
+    HiGHS ILP over the top-K columns produces the integral plan.
+
+Like the paper (Fig. 14a), runtime is independent of the number of device
+*instances* and polynomial in the number of classes.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+from scipy import sparse
+from scipy.optimize import Bounds, LinearConstraint, linprog
+from scipy.optimize import milp as scipy_milp
+
+from repro.core.costmodel import LatencyTable, transfer_latency
+from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
+from repro.core.types import ClusterSpec, ModelProfile
+
+
+@dataclass(frozen=True)
+class Template:
+    """A fully-specified pooled pipeline except for pool sizes."""
+
+    model_name: str
+    bounds: tuple[int, ...]  # partition boundaries incl. 0 and M
+    classes: tuple[str, ...]
+    vfracs: tuple[int, ...]
+    batch: int
+    stage_lat: tuple[float, ...]
+    xfer_lat: tuple[float, ...]
+
+    @property
+    def depth(self) -> int:
+        return len(self.classes)
+
+    @property
+    def total_latency(self) -> float:
+        return sum(self.stage_lat) + sum(self.xfer_lat)
+
+    def stage_throughput_per_vdev(self, d: int) -> float:
+        return self.batch / self.stage_lat[d]
+
+    def chips_per_rps(self) -> dict[str, float]:
+        """Physical chips of each class needed per 1 rps of pipeline throughput."""
+        cost: dict[str, float] = {}
+        for d, cname in enumerate(self.classes):
+            per_vdev = self.stage_throughput_per_vdev(d)
+            cost[cname] = cost.get(cname, 0.0) + 1.0 / (per_vdev * self.vfracs[d])
+        return cost
+
+
+def enumerate_templates(
+    profile: ModelProfile,
+    table: LatencyTable,
+    cluster: ClusterSpec,
+    slo_margin: float = 0.4,
+    max_partitions: int = 3,
+) -> list[Template]:
+    M = profile.n_blocks
+    T = profile.slo_s * (1.0 - slo_margin)
+    out: list[Template] = []
+    for depth in range(1, max_partitions + 1):
+        for cut in itertools.combinations(range(1, M), depth - 1):
+            bounds = (0,) + cut + (M,)
+            for classes in itertools.product(cluster.classes, repeat=depth):
+                for b in table.batch_sizes:
+                    xfers = tuple(
+                        transfer_latency(
+                            profile, cluster, classes[d], classes[d + 1],
+                            bounds[d + 1], b,
+                        )
+                        for d in range(depth - 1)
+                    )
+                    xfer_total = sum(xfers)
+                    if xfer_total >= T:
+                        continue
+                    # per-stage latency options over vfracs, pruned to those
+                    # that could still fit the SLO alone
+                    opts = []
+                    feasible = True
+                    for d in range(depth):
+                        cand = []
+                        for v in table.vfracs:
+                            lat = table.partition(
+                                bounds[d], bounds[d + 1], classes[d], v, b
+                            )
+                            if lat + xfer_total < T:
+                                cand.append((v, lat))
+                        if not cand:
+                            feasible = False
+                            break
+                        opts.append(cand)
+                    if not feasible:
+                        continue
+                    for combo in itertools.product(*opts):
+                        vfracs = tuple(v for v, _ in combo)
+                        lats = tuple(lat for _, lat in combo)
+                        if sum(lats) + xfer_total > T:
+                            continue
+                        out.append(
+                            Template(
+                                model_name=profile.model_name,
+                                bounds=bounds,
+                                classes=classes,
+                                vfracs=vfracs,
+                                batch=b,
+                                stage_lat=lats,
+                                xfer_lat=xfers,
+                            )
+                        )
+    return _pareto_prune(out)
+
+
+def _pareto_prune(templates: list[Template]) -> list[Template]:
+    """Drop templates strictly dominated on (per-class chips/rps, latency)."""
+    by_key: dict[tuple, list[Template]] = {}
+    for t in templates:
+        by_key.setdefault((t.bounds, t.classes, t.batch), []).append(t)
+    keep: list[Template] = []
+    for group in by_key.values():
+        frontier: list[Template] = []
+        for t in group:
+            ct = t.chips_per_rps()
+            dominated = False
+            for u in group:
+                if u is t:
+                    continue
+                cu = u.chips_per_rps()
+                if (
+                    all(cu.get(k, 0.0) <= ct.get(k, 0.0) + 1e-12 for k in ct)
+                    and u.total_latency <= t.total_latency + 1e-12
+                    and (
+                        any(cu.get(k, 0.0) < ct.get(k, 0.0) - 1e-12 for k in ct)
+                        or u.total_latency < t.total_latency - 1e-12
+                    )
+                ):
+                    dominated = True
+                    break
+            if not dominated:
+                frontier.append(t)
+        keep.extend(frontier)
+    return keep
+
+
+# ----------------------------------------------------------------------------
+# Master problem
+# ----------------------------------------------------------------------------
+
+
+@dataclass
+class PlanningResult:
+    plan: ClusterPlan
+    n_templates: int
+    lp_upper_bound: float
+
+
+def plan_cluster(
+    profiles: dict[str, ModelProfile],
+    tables: dict[str, LatencyTable],
+    cluster: ClusterSpec,
+    weights: dict[str, float] | None = None,
+    slo_margin: float = 0.4,
+    max_partitions: int = 3,
+    top_k: int = 250,
+    time_limit_s: float = 60.0,
+) -> PlanningResult:
+    """Plan pooled pipelines for one or more models on `cluster`.
+
+    Single model: maximize total throughput.  Multiple models: maximize the
+    minimum workload-normalized throughput (paper section 3 Objective).
+    """
+    t0 = time.perf_counter()
+    names = list(profiles)
+    for n in names:
+        if profiles[n].model_name != n:
+            raise ValueError(
+                f"profiles key {n!r} != profile.model_name {profiles[n].model_name!r}")
+    weights = weights or {n: 1.0 for n in names}
+    templates: list[Template] = []
+    for n in names:
+        templates.extend(
+            enumerate_templates(
+                profiles[n], tables[n], cluster, slo_margin, max_partitions
+            )
+        )
+    if not templates:
+        return PlanningResult(
+            plan=ClusterPlan(cluster=cluster, pipelines=[],
+                             solver_wall_s=time.perf_counter() - t0),
+            n_templates=0,
+            lp_upper_bound=0.0,
+        )
+
+    classes = cluster.classes
+    # --- Phase 1: LP over all templates (vars = x_t >= 0 rps) ---------------
+    nt = len(templates)
+    cost = np.zeros((len(classes), nt))
+    for j, t in enumerate(templates):
+        c = t.chips_per_rps()
+        for i, cname in enumerate(classes):
+            cost[i, j] = c.get(cname, 0.0)
+    budget = np.array([float(cluster.counts[c]) for c in classes])
+
+    multi = len(names) > 1
+    if not multi:
+        res = linprog(
+            -np.ones(nt), A_ub=cost, b_ub=budget, bounds=(0, None), method="highs"
+        )
+        lp_ub = -res.fun if res.status == 0 else 0.0
+        lp_x = res.x if res.x is not None else np.zeros(nt)
+    else:
+        # max z s.t. sum_{t in model m} x_t >= z * w_m ; chips within budget
+        # vars: [x_1..x_nt, z]
+        c_obj = np.zeros(nt + 1)
+        c_obj[-1] = -1.0
+        A = np.zeros((len(classes) + len(names), nt + 1))
+        b = np.zeros(len(classes) + len(names))
+        A[: len(classes), :nt] = cost
+        b[: len(classes)] = budget
+        for mi, n in enumerate(names):
+            for j, t in enumerate(templates):
+                if t.model_name == n:
+                    A[len(classes) + mi, j] = -1.0
+            A[len(classes) + mi, -1] = weights[n]
+            b[len(classes) + mi] = 0.0
+        res = linprog(c_obj, A_ub=A, b_ub=b, bounds=(0, None), method="highs")
+        lp_ub = -res.fun if res.status == 0 else 0.0
+        lp_x = res.x[:nt] if res.x is not None else np.zeros(nt)
+
+    # --- Phase 2: exact integer master over the most promising columns ------
+    # LP-ranked, but never drop zero-mass columns while top_k capacity is
+    # free: a degenerate LP optimum can put zero mass on the column the
+    # *integral* optimum needs (whole-chip granularity), and with nt <= top_k
+    # the master ILP over every column is exact — matching the literal MILP.
+    order = np.argsort(-lp_x)
+    active = [int(i) for i in order[: min(top_k, nt)]]
+    # Always include the best single-stage fallback column per (model, class)
+    # — highest per-chip throughput — so the integral problem keeps a feasible
+    # column for every model/class even when the LP cut dropped them all.
+    best_single: dict[tuple[str, str], tuple[float, int]] = {}
+    for j, t in enumerate(templates):
+        if t.depth != 1:
+            continue
+        per_chip = t.stage_throughput_per_vdev(0) * t.vfracs[0]
+        key = (t.model_name, t.classes[0])
+        if key not in best_single or per_chip > best_single[key][0]:
+            best_single[key] = (per_chip, j)
+    active_set = set(active)
+    for _, j in best_single.values():
+        if j not in active_set:
+            active.append(j)
+            active_set.add(j)
+
+    sel = [templates[j] for j in active]
+    plan = _solve_master_ilp(
+        sel, profiles, cluster, names, weights, multi, time_limit_s
+    )
+    plan.solver_wall_s = time.perf_counter() - t0
+    return PlanningResult(plan=plan, n_templates=nt, lp_upper_bound=lp_ub)
+
+
+def _solve_master_ilp(
+    templates: list[Template],
+    profiles: dict[str, ModelProfile],
+    cluster: ClusterSpec,
+    names: list[str],
+    weights: dict[str, float],
+    multi: bool,
+    time_limit_s: float,
+) -> ClusterPlan:
+    """Exact ILP over integer *chip* counts c_{t,d} (vdevs = v * c).
+
+    The paper's constraint (23) counts fractional chips (g/v), which would let
+    one physical chip host virtual devices of *different* partitions; our
+    runtime dedicates a chip to one partition pool (weights resident per
+    partition), so the master problem allocates whole chips — physically
+    realizable plans at a tiny optimality cost vs the literal form."""
+    classes = cluster.classes
+    nt = len(templates)
+    r_off: list[int] = []  # var offset of r_{t,0}
+    nv = 0
+    for t in templates:
+        r_off.append(nv)
+        nv += t.depth
+    x_off = nv
+    nv += nt
+    z_idx = None
+    if multi:
+        z_idx = nv
+        nv += 1
+
+    rows, cols, vals, lbs, ubs = [], [], [], [], []
+
+    def add_row(coef: dict[int, float], lb: float, ub: float) -> None:
+        ridx = len(lbs)
+        for c, v in coef.items():
+            rows.append(ridx)
+            cols.append(c)
+            vals.append(v)
+        lbs.append(lb)
+        ubs.append(ub)
+
+    # x_t <= X_{t,d} * v_{t,d} * c_{t,d}   (c = whole chips for stage d)
+    for j, t in enumerate(templates):
+        for d in range(t.depth):
+            add_row(
+                {x_off + j: 1.0,
+                 r_off[j] + d: -t.stage_throughput_per_vdev(d) * t.vfracs[d]},
+                -np.inf,
+                0.0,
+            )
+    # class budgets: sum c <= N_k
+    for cname in classes:
+        coef: dict[int, float] = {}
+        for j, t in enumerate(templates):
+            for d in range(t.depth):
+                if t.classes[d] == cname:
+                    coef[r_off[j] + d] = coef.get(r_off[j] + d, 0.0) + 1.0
+        add_row(coef, -np.inf, float(cluster.counts[cname]))
+    # multi-model: z <= sum_m x_t / w_m
+    if multi:
+        for n in names:
+            coef = {z_idx: weights[n]}
+            for j, t in enumerate(templates):
+                if t.model_name == n:
+                    coef[x_off + j] = -1.0
+            add_row(coef, -np.inf, 0.0)
+
+    c = np.zeros(nv)
+    if multi:
+        c[z_idx] = -1.0
+        # small tie-break on total throughput
+        c[x_off : x_off + nt] = -1e-6
+    else:
+        c[x_off : x_off + nt] = -1.0
+
+    integrality = np.zeros(nv)
+    ub = np.full(nv, np.inf)
+    for j, t in enumerate(templates):
+        for d in range(t.depth):
+            integrality[r_off[j] + d] = 1
+            ub[r_off[j] + d] = cluster.counts[t.classes[d]]
+
+    A = sparse.csr_matrix((vals, (rows, cols)), shape=(len(lbs), nv))
+    res = scipy_milp(
+        c,
+        constraints=LinearConstraint(A, np.array(lbs), np.array(ubs)),
+        integrality=integrality,
+        bounds=Bounds(np.zeros(nv), ub),
+        options={"time_limit": time_limit_s, "mip_rel_gap": 1e-4},
+    )
+    if res.x is None:
+        raise RuntimeError(f"master ILP failed: {res.message}")
+
+    plan = ClusterPlan(cluster=cluster, pipelines=[])
+    plan.objective = -res.fun
+    dual = getattr(res, "mip_dual_bound", None)
+    plan.dual_bound = -dual if dual is not None else plan.objective
+    for j, t in enumerate(templates):
+        c = [int(round(res.x[r_off[j] + d])) for d in range(t.depth)]
+        if min(c) < 1:
+            continue
+        stages = tuple(
+            StagePlan(
+                block_start=t.bounds[d],
+                block_end=t.bounds[d + 1],
+                accel_class=t.classes[d],
+                vfrac=t.vfracs[d],
+                n_vdev=c[d] * t.vfracs[d],
+                latency_s=t.stage_lat[d],
+            )
+            for d in range(t.depth)
+        )
+        plan.pipelines.append(
+            PipelinePlan(
+                model_name=t.model_name,
+                batch_size=t.batch,
+                stages=stages,
+                xfer_latency_s=t.xfer_lat,
+            )
+        )
+    return plan

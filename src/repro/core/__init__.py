@@ -1,15 +1,23 @@
-"""PPipe core: MILP control plane + reservation-based data plane.
+"""PPipe core: plan/runtime value types + reservation-based data plane.
 
-The paper's primary contribution lives here: pre-partitioning (blocks),
-the analytical profiler (costmodel), the literal Appendix-A.2 MILP (milp)
-and its scalable template-enumeration equivalent (enumerate), the plan
-dataclasses (plan), and the data plane — reservation tables + probe/reserve
-(reservation), adaptive batching schedulers (scheduler), and the
-discrete-event simulator (simulator).
+The execution-side primitives live here: pre-partitioning (blocks), the
+analytical profiler (costmodel), the plan dataclasses (plan), runtime
+instantiation (runtime), and the data plane — reservation tables +
+probe/reserve (reservation), adaptive batching schedulers (scheduler), and
+the discrete-event simulator (simulator).
+
+Planning itself moved to `repro.controlplane` (Planner facade over the
+literal MILP, template enumeration, and the NP/DART-r baselines); the full
+planner surface (`plan_cluster`, `solve_milp`, `plan_np`, `plan_dart_r`,
+`PlanningResult`) is re-exported here lazily — lazily so that
+`repro.controlplane`, which builds on these core primitives, can be imported
+first without a cycle.  The old deep modules (`repro.core.milp` etc.) remain
+as deprecation shims.
 """
 
-from . import baselines, blocks, costmodel, milp, plan, reservation, runtime, scheduler, simulator, types  # noqa: F401
-from .enumerate import plan_cluster  # noqa: F401
+import importlib
+
+from . import blocks, costmodel, plan, reservation, runtime, scheduler, simulator, types  # noqa: F401
 from .plan import ClusterPlan, PipelinePlan, StagePlan  # noqa: F401
 from .types import (  # noqa: F401
     ACCEL_CLASSES,
@@ -20,3 +28,30 @@ from .types import (  # noqa: F401
     ModelProfile,
     Request,
 )
+
+# name -> (module, attr); attr None re-exports the module itself (the
+# deprecation shims for repro.core.milp / .enumerate / .baselines)
+_LAZY = {
+    "plan_cluster": ("repro.controlplane.templates", "plan_cluster"),
+    "PlanningResult": ("repro.controlplane.templates", "PlanningResult"),
+    "solve_milp": ("repro.controlplane.milp", "solve_milp"),
+    "plan_np": ("repro.controlplane.baselines", "plan_np"),
+    "plan_dart_r": ("repro.controlplane.baselines", "plan_dart_r"),
+    "baselines": ("repro.core.baselines", None),
+    "enumerate": ("repro.core.enumerate", None),
+    "milp": ("repro.core.milp", None),
+}
+
+
+def __getattr__(name: str):
+    spec = _LAZY.get(name)
+    if spec is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    module = importlib.import_module(spec[0])
+    value = module if spec[1] is None else getattr(module, spec[1])
+    globals()[name] = value  # cache: __getattr__ runs once per name
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

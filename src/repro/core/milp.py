@@ -1,284 +1,28 @@
-"""Literal MILP formulation of PPipe's control plane (paper Appendix A.2).
+"""Deprecated shim: the literal MILP moved to `repro.controlplane.milp`.
 
-Decision variables (per the paper, with batch-size unification + virtual
-devices):
-
-    p_{l,d,v,b,i,j} in {0,1}  partition d of pipeline l spans blocks [i,j) and
-                              runs at batch b on 1/v virtual devices
-    g_{l,d,v,b,i,j} in Z>=0   number of virtual devices for that partition
-    x_l             in R>=0   pipeline throughput (epigraph of min over stages)
-
-Constraints (16)-(28) are encoded with the standard linearizations:
-  * (18) adjacency + unified batch: marginal equality between consecutive
-    partitions for every (b, j);
-  * (21)/(22) indicators: p <= g <= U*p with U = N_k * v;
-  * (28) min: x_l <= sum X*g per stage.
-
-One deliberate deviation, noted in DESIGN.md: the paper states sum(p)=1 per
-(l,d) yet also reports that unused pipelines get zero GPUs; with g>=p these
-cannot both hold, so we use sum(p) <= 1 (a pipeline may be unselected), which
-matches the reported solver behaviour.
-
-This literal model is exponential-ish in block count and is used at small
-sizes for validation; `enumerate.py` is the scalable production path whose
-optimum provably coincides (tests cross-check the two).
-
-Solved with scipy's HiGHS MILP solver (Gurobi is unavailable offline; HiGHS is
-an exact branch-and-cut solver).
+`from repro.core.milp import solve_milp` keeps working (with a
+DeprecationWarning on attribute access); new code should import from
+`repro.controlplane` — the `Planner` facade is the supported entry point.
 """
 
 from __future__ import annotations
 
-import itertools
-import time
-from dataclasses import dataclass
+import warnings
 
-import numpy as np
-from scipy import sparse
-from scipy.optimize import Bounds, LinearConstraint
-from scipy.optimize import milp as scipy_milp
+from repro.controlplane import milp as _impl
 
-from .costmodel import LatencyTable, transfer_latency
-from .plan import ClusterPlan, PipelinePlan, StagePlan
-from .types import ClusterSpec, ModelProfile
-
-MAX_BINARIES = 250_000
+_MSG = ("repro.core.milp has moved to repro.controlplane.milp; "
+        "use repro.controlplane.Planner(backend='milp') or import from "
+        "repro.controlplane")
 
 
-@dataclass(frozen=True)
-class PipelineShape:
-    """One enumerated pipeline skeleton: the accelerator class per partition."""
-
-    classes: tuple[str, ...]
-
-    @property
-    def depth(self) -> int:
-        return len(self.classes)
+def __getattr__(name: str):
+    if name.startswith("__"):
+        raise AttributeError(name)
+    value = getattr(_impl, name)
+    warnings.warn(_MSG, DeprecationWarning, stacklevel=2)
+    return value
 
 
-def enumerate_pipeline_shapes(cluster: ClusterSpec, max_partitions: int) -> list[PipelineShape]:
-    shapes = []
-    for depth in range(1, max_partitions + 1):
-        for combo in itertools.product(cluster.classes, repeat=depth):
-            shapes.append(PipelineShape(tuple(combo)))
-    return shapes
-
-
-class _VarPool:
-    def __init__(self) -> None:
-        self.n = 0
-        self.names: list[tuple] = []
-
-    def new(self, key: tuple) -> int:
-        idx = self.n
-        self.n += 1
-        self.names.append(key)
-        return idx
-
-
-def solve_milp(
-    profile: ModelProfile,
-    table: LatencyTable,
-    cluster: ClusterSpec,
-    slo_margin: float = 0.4,
-    max_partitions: int = 3,
-    time_limit_s: float = 120.0,
-) -> ClusterPlan:
-    """Build and solve the literal Appendix-A.2 MILP; return the plan."""
-    t0 = time.perf_counter()
-    M = profile.n_blocks
-    T = profile.slo_s * (1.0 - slo_margin)
-    shapes = enumerate_pipeline_shapes(cluster, max_partitions)
-
-    vp = _VarPool()
-    # index maps: (l, d, v, b, i, j) -> var id
-    p_idx: dict[tuple, int] = {}
-    g_idx: dict[tuple, int] = {}
-    x_idx: dict[int, int] = {}
-
-    def stage_spans(depth: int, d: int):
-        i_lo = d  # at least one block per earlier partition
-        i_hi = M - (depth - d)  # leave one block per later partition
-        for i in range(i_lo, i_hi + 1):
-            j_lo = i + 1
-            j_hi = M - (depth - d - 1)
-            for j in range(j_lo, j_hi + 1):
-                if d == 0 and i != 0:
-                    continue
-                if d == depth - 1 and j != M:
-                    continue
-                yield i, j
-
-    for l, shape in enumerate(shapes):
-        for d in range(shape.depth):
-            for v in table.vfracs:
-                for b in table.batch_sizes:
-                    for i, j in stage_spans(shape.depth, d):
-                        p_idx[(l, d, v, b, i, j)] = vp.new(("p", l, d, v, b, i, j))
-        x_idx[l] = None  # placeholder
-    n_p = vp.n
-    if n_p > MAX_BINARIES:
-        raise ValueError(
-            f"literal MILP too large ({n_p} binaries); use enumerate.plan_cluster "
-            "(this is exactly the paper's C1 — pre-partition to fewer blocks)"
-        )
-    for key in list(p_idx):
-        g_idx[key] = vp.new(("g",) + key)
-    for l in range(len(shapes)):
-        x_idx[l] = vp.new(("x", l))
-    nvar = vp.n
-
-    rows, cols, vals, lbs, ubs = [], [], [], [], []
-
-    def add_row(coef: dict[int, float], lb: float, ub: float) -> None:
-        r = len(lbs)
-        for c, v in coef.items():
-            rows.append(r)
-            cols.append(c)
-            vals.append(v)
-        lbs.append(lb)
-        ubs.append(ub)
-
-    def xfer(shape: PipelineShape, d: int, j: int, b: int) -> float:
-        return transfer_latency(
-            profile, cluster, shape.classes[d], shape.classes[d + 1], j, b
-        )
-
-    for l, shape in enumerate(shapes):
-        depth = shape.depth
-        # (16) sum p <= 1 per (l, d)
-        for d in range(depth):
-            coef = {
-                p_idx[k]: 1.0
-                for k in p_idx
-                if k[0] == l and k[1] == d
-            }
-            add_row(coef, 0.0, 1.0)
-        # (18) adjacency + batch unification: marginals over (b, boundary j)
-        for d in range(depth - 1):
-            for b in table.batch_sizes:
-                for j in range(1, M):
-                    coef: dict[int, float] = {}
-                    for k, var in p_idx.items():
-                        if k[0] == l and k[1] == d and k[3] == b and k[5] == j:
-                            coef[var] = coef.get(var, 0.0) + 1.0
-                        if k[0] == l and k[1] == d + 1 and k[3] == b and k[4] == j:
-                            coef[var] = coef.get(var, 0.0) - 1.0
-                    if coef:
-                        add_row(coef, 0.0, 0.0)
-        # (27) SLO: sum_d (C + Y) p <= T
-        coef = {}
-        for k, var in p_idx.items():
-            if k[0] != l:
-                continue
-            _, d, v, b, i, j = k
-            lat = table.partition(i, j, shape.classes[d], v, b)
-            if d < depth - 1:
-                lat += xfer(shape, d, j, b)
-            coef[var] = lat
-        add_row(coef, -np.inf, T)
-        # (21)/(22): p <= g <= U p
-        for k, pvar in p_idx.items():
-            if k[0] != l:
-                continue
-            _, d, v, b, i, j = k
-            gvar = g_idx[k]
-            U = cluster.counts[shape.classes[d]] * v
-            add_row({gvar: 1.0, pvar: -float(U)}, -np.inf, 0.0)
-            add_row({gvar: 1.0, pvar: -1.0}, 0.0, np.inf)
-        # (28) epigraph: x_l <= sum X g per stage d
-        for d in range(depth):
-            coef = {x_idx[l]: 1.0}
-            for k, gvar in g_idx.items():
-                if k[0] == l and k[1] == d:
-                    _, _, v, b, i, j = k
-                    lat = table.partition(i, j, shape.classes[d], v, b)
-                    coef[gvar] = -(b / lat)
-            add_row(coef, -np.inf, 0.0)
-
-    # (23) class budgets
-    for cname, count in cluster.counts.items():
-        coef = {}
-        for k, gvar in g_idx.items():
-            l, d, v, b, i, j = k
-            if shapes[l].classes[d] == cname:
-                coef[gvar] = 1.0 / v
-        add_row(coef, -np.inf, float(count))
-
-    A = sparse.csr_matrix((vals, (rows, cols)), shape=(len(lbs), nvar))
-    c = np.zeros(nvar)
-    for l in range(len(shapes)):
-        c[x_idx[l]] = -1.0  # maximize sum x_l
-
-    integrality = np.zeros(nvar)
-    lb = np.zeros(nvar)
-    ub = np.full(nvar, np.inf)
-    for k, var in p_idx.items():
-        integrality[var] = 1
-        ub[var] = 1.0
-    for k, var in g_idx.items():
-        l, d, v, b, i, j = k
-        integrality[var] = 1
-        ub[var] = cluster.counts[shapes[l].classes[d]] * v
-
-    res = scipy_milp(
-        c,
-        constraints=LinearConstraint(A, np.array(lbs), np.array(ubs)),
-        integrality=integrality,
-        bounds=Bounds(lb, ub),
-        options={"time_limit": time_limit_s, "mip_rel_gap": 1e-6},
-    )
-    if res.x is None:
-        raise RuntimeError(f"MILP solve failed: {res.message}")
-
-    plan = _extract_plan(res.x, shapes, p_idx, g_idx, profile, table, cluster)
-    plan.solver_wall_s = time.perf_counter() - t0
-    plan.objective = -res.fun
-    return plan
-
-
-def _extract_plan(x, shapes, p_idx, g_idx, profile, table, cluster) -> ClusterPlan:
-    pipelines = []
-    for l, shape in enumerate(shapes):
-        stages = []
-        batch = None
-        ok = True
-        for d in range(shape.depth):
-            sel = [
-                k for k, var in p_idx.items()
-                if k[0] == l and k[1] == d and x[var] > 0.5 and x[g_idx[k]] > 0.5
-            ]
-            if not sel:
-                ok = False
-                break
-            k = sel[0]
-            _, _, v, b, i, j = k
-            batch = b
-            stages.append(
-                StagePlan(
-                    block_start=i,
-                    block_end=j,
-                    accel_class=shape.classes[d],
-                    vfrac=v,
-                    n_vdev=int(round(x[g_idx[k]])),
-                    latency_s=table.partition(i, j, shape.classes[d], v, b),
-                )
-            )
-        if not ok or not stages:
-            continue
-        xfers = tuple(
-            transfer_latency(
-                profile, cluster, shape.classes[d], shape.classes[d + 1],
-                stages[d].block_end, batch,
-            )
-            for d in range(len(stages) - 1)
-        )
-        pipelines.append(
-            PipelinePlan(
-                model_name=profile.model_name,
-                batch_size=batch,
-                stages=tuple(stages),
-                xfer_latency_s=xfers,
-            )
-        )
-    return ClusterPlan(cluster=cluster, pipelines=pipelines)
+def __dir__():
+    return dir(_impl)

@@ -63,6 +63,10 @@ class ClusterPlan:
     pipelines: list[PipelinePlan] = field(default_factory=list)
     solver_wall_s: float = 0.0
     objective: float = 0.0
+    # best known bound on the objective: the MILP/master-ILP dual bound for
+    # solver-built plans (tight only when optimality was proven), or the
+    # objective itself for construction-based planners (DART-r)
+    dual_bound: float = 0.0
 
     @property
     def throughput(self) -> float:
@@ -84,10 +88,19 @@ class ClusterPlan:
         1. partitions tile [0, n_blocks) contiguously;
         2. per-class chip usage within inventory;
         3. pipeline latency within the (margin-deflated) SLO;
-        4. positive throughput, pool sizes >= 1.
+        4. positive throughput, pool sizes >= 1;
+        5. exactly one transfer latency per stage boundary (n_stages - 1);
+        6. stage and transfer latencies non-negative.
         """
         for p in self.pipelines:
             prof = profiles[p.model_name]
+            if len(p.xfer_latency_s) != p.n_stages - 1:
+                raise ValueError(
+                    f"{p.model_name}: {len(p.xfer_latency_s)} transfer latencies "
+                    f"for {p.n_stages} stages (expected n_stages - 1)"
+                )
+            if any(x < 0.0 for x in p.xfer_latency_s):
+                raise ValueError(f"negative transfer latency in {p}")
             expect = 0
             for s in p.stages:
                 if s.block_start != expect or s.block_end <= s.block_start:
@@ -95,6 +108,8 @@ class ClusterPlan:
                 expect = s.block_end
                 if s.n_vdev < 1 or s.vfrac not in (1, 2, 3, 4):
                     raise ValueError(f"bad pool in {s}")
+                if s.latency_s < 0.0:
+                    raise ValueError(f"negative stage latency in {s}")
             if expect != prof.n_blocks:
                 raise ValueError(f"pipeline does not cover all blocks: {p}")
             limit = prof.slo_s * (1.0 - slo_margin) + 1e-9

@@ -6,6 +6,8 @@ Module layout (DESIGN.md section 3):
   dispatcher.py overlapped real JAX execution + feedback correction
   metrics.py    SLO attainment / goodput / utilization / queue-delay telemetry
   plane.py      the event loop tying them together + plan->executor builders
+                + DataPlane.swap_plan, the drain-and-swap hand-off point for
+                online re-planning (repro.controlplane.ReplanLoop)
 """
 
 from .batcher import AdaptiveBatcher, unloaded_latency_s  # noqa: F401

@@ -67,6 +67,11 @@ class AdaptiveBatcher:
     def pending(self, model: str) -> int:
         return self.queues.pending(model)
 
+    def take_all(self) -> list[Request]:
+        """Drain every queue for a plan hot-swap; admission counters are not
+        touched (the requests were already admitted once)."""
+        return self.queues.take_all()
+
     @property
     def stats(self) -> SchedulerStats:
         return self.sched.stats

@@ -27,6 +27,9 @@ class DispatchRecord:
     planned_finish_s: float
     oldest_deadline_s: float
     queue_len_after: int
+    # plan epoch the dispatch ran under (bumped by DataPlane.swap_plan);
+    # pipeline_id is only unique within an epoch
+    epoch: int = 0
 
 
 @dataclass
@@ -42,7 +45,12 @@ class Telemetry:
     inflight_hwm: int = 0
     probes_per_dispatch: float = 0.0
     horizon_s: float = 0.0
-    # measured wall seconds per (pipeline_id, stage_idx), real execution only
+    # live re-planning (repro.controlplane): completed plan hot-swaps, and one
+    # (virtual time, reason) entry per swap for continuity assertions
+    plan_swaps: int = 0
+    swap_log: list = field(default_factory=list)
+    # measured wall seconds per (epoch, pipeline_id, stage_idx), real
+    # execution only (pipeline ids restart at 0 after each plan swap)
     stage_wall_s: dict = field(default_factory=dict)
     batch_wall_s: list[float] = field(default_factory=list)
     utilization: dict = field(default_factory=dict)
@@ -79,12 +87,23 @@ class Telemetry:
         return float(np.percentile(self.queue_delay_s, q))
 
     # -------------------------------------------------------------- finish
-    def finalize(self, runtime: ClusterRuntime) -> None:
-        """Freeze end-of-run aggregates derived from the cluster runtime."""
-        self.utilization = utilization_by_class(runtime, max(self.horizon_s, 1e-9))
+    def finalize(self, runtime: ClusterRuntime, retired=()) -> None:
+        """Freeze end-of-run aggregates derived from the cluster runtime(s).
+
+        `retired` holds runtimes replaced by plan hot-swaps; their accumulated
+        busy time still counts toward utilization (same physical chips, same
+        horizon), so telemetry stays continuous across a swap.
+        """
+        horizon = max(self.horizon_s, 1e-9)
+        self.utilization = utilization_by_class(runtime, horizon)
+        for rt in retired:
+            for c, u in utilization_by_class(rt, horizon).items():
+                self.utilization[c] = self.utilization.get(c, 0.0) + u
+        # retired[i] served epoch i; the current runtime is the last epoch
         self.feedback_scales = {
-            (p.pipeline_id, si): s.lat_scale
-            for p in runtime.pipelines
+            (epoch, p.pipeline_id, si): s.lat_scale
+            for epoch, rt in enumerate((*retired, runtime))
+            for p in rt.pipelines
             for si, s in enumerate(p.stages)
             if abs(s.lat_scale - 1.0) > 1e-12
         }
@@ -92,12 +111,12 @@ class Telemetry:
     def snapshot(self) -> dict:
         """JSON-able summary (consumed by BENCH_e2e.json and the example)."""
         walls = {
-            f"p{pid}s{si}": {
+            f"e{epoch}p{pid}s{si}": {
                 "n": len(v),
                 "mean_ms": float(np.mean(v)) * 1e3,
                 "p99_ms": float(np.percentile(v, 99)) * 1e3,
             }
-            for (pid, si), v in self.stage_wall_s.items() if v
+            for (epoch, pid, si), v in self.stage_wall_s.items() if v
         }
         return {
             "requests": len(self.outcomes),
@@ -119,10 +138,11 @@ class Telemetry:
                 "exec_failure": self.exec_failures,
             },
             "inflight_hwm": self.inflight_hwm,
+            "plan_swaps": self.plan_swaps,
             "utilization_by_class": dict(self.utilization),
             "stage_wall": walls,
-            "feedback_scales": {f"p{p}s{s}": v
-                                for (p, s), v in self.feedback_scales.items()},
+            "feedback_scales": {f"e{e}p{p}s{s}": v
+                                for (e, p, s), v in self.feedback_scales.items()},
         }
 
     def summary(self) -> str:

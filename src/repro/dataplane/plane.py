@@ -29,9 +29,10 @@ from dataclasses import dataclass
 
 from repro.core import reservation
 from repro.core.plan import ClusterPlan
-from repro.core.runtime import ClusterRuntime
+from repro.core.reservation import PipelineRuntime
+from repro.core.runtime import ClusterRuntime, build_runtime
 from repro.core.scheduler import Dispatch, Drop, WaitUntil
-from repro.core.types import Request, RequestOutcome
+from repro.core.types import ModelProfile, Request, RequestOutcome
 
 from .batcher import AdaptiveBatcher
 from .dispatcher import FeedbackController, PoolDispatcher
@@ -46,6 +47,13 @@ class _Job:
     requests: list[Request]
     probe: reservation.ProbeResult
     exec_id: int | None  # dispatcher job id (None when no real execution)
+    # the runtime objects this batch was probed/dispatched on.  A plan
+    # hot-swap (swap_plan) replaces DataPlane.rt/dispatcher/fb, so in-flight
+    # jobs must keep their own references to finish on the old plan's pools.
+    pipeline: PipelineRuntime = None
+    epoch: int = 0
+    dispatcher: PoolDispatcher | None = None
+    fb: FeedbackController | None = None
     stage_idx: int = 0
     clock: float = 0.0  # virtual time the batch finished its previous hop
 
@@ -80,28 +88,59 @@ class DataPlane:
             raise ValueError(f"feedback must be planned|measured, got {feedback!r}")
         if feedback == "measured" and dispatcher is None:
             raise ValueError("measured feedback requires a dispatcher")
-        self.rt = runtime
-        self.batcher = AdaptiveBatcher(runtime, policy)
-        self.dispatcher = dispatcher
+        self.policy = policy
         self.feedback = feedback
+        self.feedback_alpha = feedback_alpha
         self.seq_len = seq_len
         self.token_fn = token_fn or _default_tokens
-        self.fb = (
-            FeedbackController(runtime, alpha=feedback_alpha,
-                               adapt_latency=feedback == "measured")
-            if dispatcher is not None else None
-        )
         self.tel = Telemetry()
         self.events: list[tuple[float, int, int, object]] = []
         self.seq = itertools.count()
         self.jobs: dict[int, _Job] = {}
         self.job_ids = itertools.count()
-        self.vdev_virtual_free: dict[int, float] = {
-            v.vdev_id: 0.0 for v in runtime.vdevs
-        }
-        self.nic_ul_free: dict[int, float] = {n.node_id: 0.0 for n in runtime.nodes}
-        self.nic_dl_free: dict[int, float] = {n.node_id: 0.0 for n in runtime.nodes}
+        # plan epoch: bumped by swap_plan; resource-free maps are keyed by
+        # (epoch, id) because vdev/node ids restart at 0 in each new runtime
+        self.epoch = 0
+        self._retired_runtimes: list[ClusterRuntime] = []
+        self._retired_dispatchers: list[tuple[int, PoolDispatcher]] = []
+        # scheduler stats accumulated from batchers retired by swap_plan, so
+        # probes_per_dispatch stays continuous across plan epochs
+        self._retired_probe_calls = 0
+        self._retired_dispatches = 0
+        # physical residual occupancy carried across swaps, keyed by
+        # (class, chip_id) / (class, host): chips a *past* epoch still holds
+        # block later epochs even if an intermediate plan never used them
+        self._phys_chip_free: dict[tuple[str, int], float] = {}
+        self._phys_nic_free: dict[tuple[str, int], float] = {}
+        self.vdev_virtual_free: dict[tuple[int, int], float] = {}
+        self.nic_ul_free: dict[tuple[int, int], float] = {}
+        self.nic_dl_free: dict[tuple[int, int], float] = {}
         self._wakes: dict[str, float] = {}
+        # called as hook(request, now) after each arrival is admitted/rejected;
+        # the ReplanLoop (repro.controlplane) registers itself here
+        self.arrival_hooks: list = []
+        self._install_runtime(runtime, dispatcher)
+
+    def _install_runtime(self, runtime: ClusterRuntime,
+                         dispatcher: PoolDispatcher | None) -> None:
+        """Install `runtime` (+ optional dispatcher) as the current plan
+        epoch: fresh admission queues/batcher, feedback controller, and
+        epoch-keyed resource-free maps.  Shared by __init__ (epoch 0) and
+        swap_plan (subsequent epochs) so the two paths cannot diverge."""
+        self.rt = runtime
+        self.batcher = AdaptiveBatcher(runtime, self.policy)
+        self.dispatcher = dispatcher
+        self.fb = (
+            FeedbackController(runtime, alpha=self.feedback_alpha,
+                               adapt_latency=self.feedback == "measured")
+            if dispatcher is not None else None
+        )
+        self.vdev_virtual_free.update(
+            {(self.epoch, v.vdev_id): 0.0 for v in runtime.vdevs})
+        self.nic_ul_free.update(
+            {(self.epoch, n.node_id): 0.0 for n in runtime.nodes})
+        self.nic_dl_free.update(
+            {(self.epoch, n.node_id): 0.0 for n in runtime.nodes})
 
     # ------------------------------------------------------------------ events
     def push(self, t: float, kind: int, payload: object) -> None:
@@ -129,21 +168,30 @@ class DataPlane:
                 last_gc = t
             horizon = max(horizon, t)
         self.tel.horizon_s = max(horizon, 1e-9)
-        self.tel.probes_per_dispatch = self.batcher.stats.probes_per_dispatch
+        probes = self._retired_probe_calls + self.batcher.stats.probe_calls
+        dispatches = self._retired_dispatches + self.batcher.stats.dispatches
+        self.tel.probes_per_dispatch = probes / max(1, dispatches)
         self._harvest_measurements()
-        self.tel.finalize(self.rt)
+        self.tel.finalize(self.rt, self._retired_runtimes)
         return self.tel
 
     # --------------------------------------------------------------- arrivals
-    def _on_arrival(self, t: float, req: Request) -> None:
-        admitted, shed = self.batcher.offer(req, t)
+    def _admit(self, req: Request, now: float) -> None:
+        """Admission bookkeeping shared by live arrivals and swap carry-over:
+        offer to the queues, record reject/shed outcomes."""
+        admitted, shed = self.batcher.offer(req, now)
         if not admitted:
             self.tel.admission_rejects += 1
             self._drop(req)
         for r in shed:
             self.tel.overflow_sheds += 1
             self._drop(r)
+
+    def _on_arrival(self, t: float, req: Request) -> None:
+        self._admit(req, t)
         self._run_scheduler(req.model_name, t)
+        for hook in list(self.arrival_hooks):
+            hook(req, t)
 
     # --------------------------------------------------------------- scheduler
     def _run_scheduler(self, model: str, now: float) -> None:
@@ -163,6 +211,159 @@ class DataPlane:
                     self.push(action.time_s, self.WAKE, model)
             elif isinstance(action, Dispatch):
                 self._dispatch(now, action)
+
+    # -------------------------------------------------------------- hot swap
+    def swap_plan(
+        self,
+        new_plan: ClusterPlan,
+        profiles: dict[str, ModelProfile],
+        now: float,
+        *,
+        dispatcher_factory=None,
+        runtime_setup=None,
+        slo_margin: float = 0.0,
+        reason: str = "replan",
+    ) -> ClusterRuntime:
+        """Install a re-solved ClusterPlan without dropping in-flight work.
+
+        Drain-and-swap semantics (the control loop's hand-off point):
+
+        * **in-flight batches** keep executing on the old plan's pools — every
+          `_Job` carries its own pipeline/epoch/dispatcher references, so
+          pending STAGE_DONE/XFER_DONE events resolve against the retired
+          runtime and the batch completes (or legitimately misses its SLO)
+          exactly as if no swap had happened;
+        * **queued requests** are carried over to the new plan's queues at
+          `now` through the normal admission path (a request the new plan can
+          no longer serve in time is rejected and gets a drop outcome — never
+          silently lost);
+        * **new arrivals** and scheduling rounds run on the new runtime
+          immediately.
+
+        `now` is the virtual time of the swap (carried requests are
+        re-admitted at it).  `slo_margin` is the margin the plan was solved
+        against, so the swap gate enforces the same budget as the solve.
+        `dispatcher_factory(new_runtime)` builds the real-execution dispatcher
+        for the new plan (None keeps the new epoch virtual).
+        `runtime_setup(new_runtime)` runs right after the runtime is built and
+        BEFORE any carried request is re-admitted or scheduled — the hook for
+        re-pricing stage latencies at measured speed (ProfileStore
+        .reprice_runtime), so the very first post-swap scheduling round probes
+        at the speed the plan was solved for.  Telemetry (the `self.tel`
+        object, counters, outcomes) is continuous across the swap; retired
+        runtimes still contribute utilization at finalize.
+        """
+        if self.dispatcher is not None and dispatcher_factory is None:
+            # a plane executing for real (planned or measured feedback) must
+            # not silently degrade to virtual execution at a swap; measured
+            # mode additionally mirrors the invariant __init__ enforces
+            raise ValueError(
+                "swap_plan on a plane with a live dispatcher requires a "
+                "dispatcher_factory for the new plan"
+            )
+        # Everything that can fail happens BEFORE any state is mutated, so a
+        # raising validate/build/setup/factory leaves the plane serving the
+        # old plan untouched (no half-swap, no drained-and-lost requests).
+        new_plan.validate(profiles, slo_margin=slo_margin)
+        new_rt = build_runtime(new_plan, profiles)
+        if runtime_setup is not None:
+            runtime_setup(new_rt)
+        new_dispatcher = dispatcher_factory(new_rt) if dispatcher_factory else None
+        if self.dispatcher is not None and new_dispatcher is None:
+            # a factory that *returns* None degrades the plane just like a
+            # missing factory would — refuse before any state is touched
+            raise ValueError(
+                "dispatcher_factory returned None for a plane with a live "
+                "dispatcher"
+            )
+        # ---- point of no return ------------------------------------------
+        self._retired_runtimes.append(self.rt)
+        if self.dispatcher is not None:
+            self._retired_dispatchers.append((self.epoch, self.dispatcher))
+        pending = self.batcher.take_all()
+        self._retired_probe_calls += self.batcher.stats.probe_calls
+        self._retired_dispatches += self.batcher.stats.dispatches
+        old_rt = self._retired_runtimes[-1]
+        old_epoch = self.epoch
+        self.epoch += 1
+        self._install_runtime(new_rt, new_dispatcher)
+        self._seed_residual_occupancy(old_rt, old_epoch, new_rt, now)
+        # stale WaitUntil coalescing state refers to the old queues; scheduled
+        # WAKE events still fire but harmlessly re-run the new scheduler
+        self._wakes.clear()
+        self.tel.plan_swaps += 1
+        self.tel.swap_log.append((now, reason))
+        models: list[str] = []
+        for req in pending:
+            # _admit rejects requests for models the new plan dropped (even
+            # under the permissive policy), so every carried request either
+            # re-enters a served queue or gets a drop outcome here
+            self._admit(req, now)
+            if req.model_name not in models:
+                models.append(req.model_name)
+        for m in models:
+            self._run_scheduler(m, now)
+        return new_rt
+
+    def _seed_residual_occupancy(self, old_rt: ClusterRuntime, old_epoch: int,
+                                 new_rt: ClusterRuntime, now: float) -> None:
+        """Carry the old epoch's in-flight chip occupancy into the new epoch.
+
+        Drain-and-swap does not duplicate hardware: batches dispatched under
+        the old plan keep their physical chips busy until they drain, so the
+        new plan's pools on those chips must not probe as free at `now`.
+        Chips are identified by (class, chip_id) and hosts/NICs by
+        (class, chip_id // chips_per_host) — `build_runtime` allocates both
+        epochs' chips per class in the same order over the same inventory.
+        The residual is each resource's last booked end (reservation
+        timelines cover in-flight work; the free maps cover started
+        stages/transfers); it is reserved on the new resource's timeline so
+        both probe() and the free-map path wait it out.
+
+        Residuals persist across consecutive swaps (`_phys_chip_free` /
+        `_phys_nic_free`): a chip busy under epoch N but unused by epoch N+1
+        still blocks epoch N+2 until it drains.  Known approximation: each
+        epoch's contribution is a snapshot at its swap.  An old-epoch stage
+        whose *actual* start later slips past its reservation (free-map
+        contention, measured-feedback inflation) can outrun the seed by up to
+        one stage duration; full cross-epoch coupling of physical resources
+        is a ROADMAP follow-up.
+        """
+        cph = max(old_rt.cluster.chips_per_host, 1)
+        chip_free = self._phys_chip_free
+        nic_free = self._phys_nic_free
+        # drop residuals that have already drained
+        for d in (chip_free, nic_free):
+            for k in [k for k, t in d.items() if t <= now]:
+                del d[k]
+        for v in old_rt.vdevs:
+            end = v.timeline.ends[-1] if v.timeline.ends else 0.0
+            end = max(end, self.vdev_virtual_free.get((old_epoch, v.vdev_id), 0.0))
+            key = (v.accel_class, v.chip_id)
+            chip_free[key] = max(chip_free.get(key, 0.0), end)
+            host = (v.accel_class, v.chip_id // cph)
+            n = v.node
+            nend = max(
+                n.uplink.ends[-1] if n.uplink.ends else 0.0,
+                n.downlink.ends[-1] if n.downlink.ends else 0.0,
+                self.nic_ul_free.get((old_epoch, n.node_id), 0.0),
+                self.nic_dl_free.get((old_epoch, n.node_id), 0.0),
+            )
+            nic_free[host] = max(nic_free.get(host, 0.0), nend)
+        for v in new_rt.vdevs:
+            free = chip_free.get((v.accel_class, v.chip_id), 0.0)
+            if free > now:
+                self.vdev_virtual_free[(self.epoch, v.vdev_id)] = free
+                v.timeline.reserve(now, free - now)
+            nfree = nic_free.get((v.accel_class, v.chip_id // cph), 0.0)
+            if nfree > now:
+                n = v.node
+                key = (self.epoch, n.node_id)
+                if self.nic_ul_free.get(key, 0.0) < nfree:
+                    self.nic_ul_free[key] = nfree
+                    self.nic_dl_free[key] = nfree
+                    n.uplink.reserve(now, nfree - now)
+                    n.downlink.reserve(now, nfree - now)
 
     def _dispatch(self, now: float, action: Dispatch) -> None:
         pr = action.probe_result
@@ -185,6 +386,7 @@ class DataPlane:
             planned_finish_s=pr.finish_time,
             oldest_deadline_s=min(r.deadline_s for r in action.requests),
             queue_len_after=self.batcher.pending(action.pipeline.model_name),
+            epoch=self.epoch,
         ))
         self.tel.queue_delay_s.extend(now - r.arrival_s for r in action.requests)
         job = _Job(
@@ -193,6 +395,10 @@ class DataPlane:
             requests=action.requests,
             probe=pr,
             exec_id=exec_id,
+            pipeline=action.pipeline,
+            epoch=self.epoch,
+            dispatcher=self.dispatcher,
+            fb=self.fb,
             clock=now,
         )
         self.jobs[job.job_id] = job
@@ -205,17 +411,18 @@ class DataPlane:
         planned = job.probe.stage_durs[k]
         if self.feedback != "measured" or job.exec_id is None:
             return planned
-        wall = self.dispatcher.poll_stage(job.exec_id, k)
-        return self.fb.observe(job.pipeline_id, k, planned, wall)
+        wall = job.dispatcher.poll_stage(job.exec_id, k)
+        return job.fb.observe(job.pipeline_id, k, planned, wall)
 
     def _start_stage(self, now: float, job: _Job) -> None:
         k = job.stage_idx
         gpu = job.probe.path[k]
         planned_start = job.probe.stage_starts[k]
         planned_dur = job.probe.stage_durs[k]
-        start = max(planned_start, job.clock, self.vdev_virtual_free[gpu.vdev_id])
+        start = max(planned_start, job.clock,
+                    self.vdev_virtual_free[(job.epoch, gpu.vdev_id)])
         dur = self._stage_dur(job, k)
-        self.vdev_virtual_free[gpu.vdev_id] = start + dur
+        self.vdev_virtual_free[(job.epoch, gpu.vdev_id)] = start + dur
         gpu.busy_s += dur
         gpu.timeline.correct(planned_start, planned_dur, start, dur)
         self.push(start + dur, self.STAGE_DONE, (job.job_id, start, dur))
@@ -231,8 +438,7 @@ class DataPlane:
         k = job.stage_idx
         src = job.probe.path[k - 1]
         dst = job.probe.path[k]
-        pipeline = self.rt.pipelines[job.pipeline_id]
-        stage = pipeline.stages[k]
+        stage = job.pipeline.stages[k]
         nbytes = stage.in_bytes_per_req * len(job.requests)
         if src.node is dst.node or nbytes <= 0:
             self._start_stage(t, job)
@@ -244,13 +450,13 @@ class DataPlane:
         start = max(
             planned_start,
             t,
-            self.nic_ul_free[src.node.node_id],
-            self.nic_dl_free[dst.node.node_id],
+            self.nic_ul_free[(job.epoch, src.node.node_id)],
+            self.nic_dl_free[(job.epoch, dst.node.node_id)],
         )
         src.node.uplink.correct(planned_start, planned_dur, start, dur)
         dst.node.downlink.correct(planned_start, planned_dur, start, dur)
-        self.nic_ul_free[src.node.node_id] = start + dur
-        self.nic_dl_free[dst.node.node_id] = start + dur
+        self.nic_ul_free[(job.epoch, src.node.node_id)] = start + dur
+        self.nic_dl_free[(job.epoch, dst.node.node_id)] = start + dur
         self.push(start + dur, self.XFER_DONE, job_id)
 
     def _on_xfer_done(self, t: float, job_id: int) -> None:
@@ -279,15 +485,19 @@ class DataPlane:
 
     # -------------------------------------------------------------- wall side
     def _harvest_measurements(self) -> None:
-        if self.dispatcher is None:
-            return
-        self.dispatcher.drain_all()
-        for c in self.dispatcher.take_completed():
-            self.tel.batch_wall_s.append(c.total_wall_s)
-            for si, w in enumerate(c.stage_wall_s):
-                self.tel.stage_wall_s.setdefault((c.pipeline_id, si), []).append(w)
-        self.tel.inflight_hwm = max(self.tel.inflight_hwm,
-                                    self.dispatcher.inflight_hwm)
+        for epoch, disp in (*self._retired_dispatchers, (self.epoch, self.dispatcher)):
+            if disp is None:
+                continue
+            disp.drain_all()
+            for c in disp.take_completed():
+                self.tel.batch_wall_s.append(c.total_wall_s)
+                for si, w in enumerate(c.stage_wall_s):
+                    # keyed by epoch too: pipeline ids restart at 0 after a
+                    # swap, and stage walls of unrelated partitions must not
+                    # blend into one percentile bucket
+                    self.tel.stage_wall_s.setdefault(
+                        (epoch, c.pipeline_id, si), []).append(w)
+            self.tel.inflight_hwm = max(self.tel.inflight_hwm, disp.inflight_hwm)
 
 
 def serve_trace(

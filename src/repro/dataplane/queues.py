@@ -43,7 +43,9 @@ class AdmissionPolicy:
         queue behaves exactly like the simulator's deque, making data-plane
         outcomes bit-identical to the simulator's (the parity test).  EDF
         order is a data-plane improvement over the simulator and only
-        coincides with FIFO when every request of a model shares one SLO."""
+        coincides with FIFO when every request of a model shares one SLO.
+        One exception survives even here: requests for a model no pipeline
+        serves are rejected (with an outcome) rather than swallowed."""
         return cls(max_depth=None, feasibility_check=False,
                    prune_expired=False, edf_order=False)
 
@@ -109,6 +111,13 @@ class ModelQueue:
                 self.shed += 1
         return True, dropped
 
+    def take_all(self) -> list[Request]:
+        """Drain the queue (in queue order) without touching drop counters.
+        Used by plan hot-swap to carry pending requests to the new plan's
+        queues — these requests are neither dropped nor re-admitted."""
+        out, self._reqs, self._deadlines = self._reqs, [], []
+        return out
+
     def prune(self, now: float) -> list[Request]:
         """Drop, in deadline order, every head whose deadline is unreachable."""
         if not self.policy.prune_expired:
@@ -127,6 +136,9 @@ class QueueSet:
     def __init__(self, min_service_s: dict[str, float],
                  policy: AdmissionPolicy | None = None) -> None:
         self.policy = policy or AdmissionPolicy()
+        # the models some pipeline actually serves; anything else is
+        # unconditionally rejected at offer() time
+        self.served = frozenset(min_service_s)
         self.by_model: dict[str, ModelQueue] = {
             m: ModelQueue(m, self.policy, s) for m, s in min_service_s.items()
         }
@@ -138,19 +150,24 @@ class QueueSet:
         return q
 
     def offer(self, req: Request, now: float) -> tuple[bool, list[Request]]:
-        q = self.by_model.get(req.model_name)
-        if q is None:
-            # no pipeline serves this model: with admission control on, the
-            # request is infeasible by definition (otherwise it would sit in a
-            # queue no scheduler ever services and silently lose its outcome)
-            q = self.queue(req.model_name)
-            if self.policy.feasibility_check:
-                q.rejected += 1
-                return False, []
-        return q.offer(req, now)
+        if req.model_name not in self.served:
+            # No pipeline serves this model (unknown model, or one dropped by
+            # a plan hot-swap): rejected unconditionally — even under the
+            # permissive policy — because it would otherwise sit in a queue
+            # no scheduler ever services and silently lose its outcome.
+            self.queue(req.model_name).rejected += 1
+            return False, []
+        return self.by_model[req.model_name].offer(req, now)
 
     def prune(self, model: str, now: float) -> list[Request]:
         return self.queue(model).prune(now)
+
+    def take_all(self) -> list[Request]:
+        """Drain every queue (plan hot-swap hand-off); counters untouched."""
+        out: list[Request] = []
+        for q in self.by_model.values():
+            out.extend(q.take_all())
+        return out
 
     def pending(self, model: str) -> int:
         return len(self.by_model.get(model, ()))

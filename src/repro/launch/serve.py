@@ -15,8 +15,7 @@ import argparse
 
 from repro.configs import ARCH_IDS
 from repro.core import costmodel as cm
-from repro.core.baselines import plan_dart_r, plan_np
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster, plan_dart_r, plan_np
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
 from repro.core.types import ClusterSpec

@@ -1,0 +1,358 @@
+"""repro.controlplane: Planner facade over all backends, ProfileStore
+(measured-speed planning), ClusterPlan.validate invariants, and online
+re-planning with live DataPlane.swap_plan."""
+
+import numpy as np
+import pytest
+
+from repro.controlplane import (
+    Objective,
+    Planner,
+    ProfileStore,
+    ReplanConfig,
+    ReplanLoop,
+    plan_cluster,
+)
+from repro.core import blocks, costmodel as cm
+from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
+from repro.core.runtime import build_runtime
+from repro.core.types import ClusterSpec, replace
+from repro.data.requests import multi_model_trace, poisson_trace
+from repro.dataplane import DataPlane
+
+CLUSTER = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 4})
+
+
+def _profile(n_layers=8, n_blocks=4, slo=0.03, seed=0, seq=256, name="m"):
+    rng = np.random.default_rng(seed)
+    layers = [cm.embed_cost(seq, 1024, 32000)]
+    for i in range(n_layers):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(seq, 1024, 16, 4),
+            cm.mlp_cost(seq, 1024, int(rng.uniform(2048, 8192))),
+        ]))
+    layers.append(cm.head_cost(seq, 1024, 32000))
+    return blocks.build_profile(name, layers, slo, n_blocks=n_blocks)
+
+
+def _table(prof, cluster=CLUSTER):
+    return cm.build_latency_table(prof, cluster, vfracs=(1, 2), batch_sizes=(1, 2))
+
+
+def _store(profs, cluster=CLUSTER):
+    store = ProfileStore(cluster, vfracs=(1, 2), batch_sizes=(1, 2))
+    for p in profs.values():
+        store.add(p, _table(p, cluster))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# ClusterPlan.validate invariants (regression: xfer arity + non-negativity)
+# ---------------------------------------------------------------------------
+
+
+def _valid_plan(prof):
+    tbl = _table(prof)
+    return plan_cluster({prof.model_name: prof}, {prof.model_name: tbl},
+                        CLUSTER, slo_margin=0.4).plan
+
+
+def _with_pipeline(plan, pipeline):
+    return ClusterPlan(cluster=plan.cluster, pipelines=[pipeline])
+
+
+def test_validate_rejects_wrong_xfer_arity():
+    prof = _profile(slo=0.025)
+    plan = _valid_plan(prof)
+    p = plan.pipelines[0]
+    # forge an extra transfer latency: n_stages stays, arity breaks
+    bad = PipelinePlan(model_name=p.model_name, batch_size=p.batch_size,
+                       stages=p.stages, xfer_latency_s=p.xfer_latency_s + (0.0,))
+    with pytest.raises(ValueError, match="transfer latencies"):
+        _with_pipeline(plan, bad).validate({"m": prof})
+
+
+def test_validate_rejects_negative_latencies():
+    prof = _profile(slo=0.025)
+    plan = _valid_plan(prof)
+    p = plan.pipelines[0]
+    s0 = p.stages[0]
+    neg_stage = replace(s0, latency_s=-1e-6)
+    bad = PipelinePlan(model_name=p.model_name, batch_size=p.batch_size,
+                       stages=(neg_stage,) + p.stages[1:],
+                       xfer_latency_s=p.xfer_latency_s)
+    with pytest.raises(ValueError, match="negative stage latency"):
+        _with_pipeline(plan, bad).validate({"m": prof})
+    if p.n_stages > 1:
+        bad_x = PipelinePlan(model_name=p.model_name, batch_size=p.batch_size,
+                             stages=p.stages,
+                             xfer_latency_s=(-1e-9,) + p.xfer_latency_s[1:])
+        with pytest.raises(ValueError, match="negative transfer latency"):
+            _with_pipeline(plan, bad_x).validate({"m": prof})
+    # the untouched plan still validates
+    plan.validate({"m": prof}, slo_margin=0.4)
+
+
+def test_validate_accepts_single_stage_empty_xfers():
+    prof = _profile(slo=0.025)
+    tbl = _table(prof)
+    lat = tbl.partition(0, prof.n_blocks, "tpu-hi", 1, 1)
+    plan = ClusterPlan(cluster=CLUSTER, pipelines=[PipelinePlan(
+        model_name="m", batch_size=1,
+        stages=(StagePlan(0, prof.n_blocks, "tpu-hi", 1, 1, lat),),
+        xfer_latency_s=(),
+    )])
+    plan.validate({"m": prof})
+
+
+# ---------------------------------------------------------------------------
+# Planner facade: four backends, one interface, optima cross-checked
+# ---------------------------------------------------------------------------
+
+
+def test_planner_runs_all_backends_and_milp_matches_enumerate():
+    prof = _profile(n_layers=6, n_blocks=3, slo=0.02)
+    profiles, tables = {"m": prof}, {"m": _table(prof)}
+    obj = Objective(slo_margin=0.4, max_partitions=2, time_limit_s=30.0)
+    plans = {
+        b: Planner(backend=b, objective=obj).plan(profiles, tables, CLUSTER)
+        for b in ("milp", "enumerate", "np", "dart-r")
+    }
+    # every backend's plan passed validate inside the facade; cross-check optima
+    assert plans["milp"].throughput == pytest.approx(
+        plans["enumerate"].throughput, rel=1e-4)
+    assert all(s.n_stages == 1 for p in (plans["np"],) for s in p.pipelines)
+    for plan in plans.values():
+        assert plan.throughput >= 0.0
+
+
+def test_planner_facade_validates_and_records_result():
+    prof = _profile(slo=0.025)
+    planner = Planner()  # enumerate default
+    plan = planner.plan({"m": prof}, {"m": _table(prof)}, CLUSTER)
+    assert plan.throughput > 0
+    assert planner.last_result is not None
+    assert planner.last_result.plan is plan
+    assert plan.throughput <= planner.last_result.lp_upper_bound * (1 + 1e-6)
+
+
+def test_planner_rejects_unknown_backend_and_multimodel_milp():
+    with pytest.raises(ValueError, match="unknown backend"):
+        Planner(backend="simplex")
+    profs = {f"m{i}": _profile(seed=i, name=f"m{i}") for i in range(2)}
+    tables = {k: _table(v) for k, v in profs.items()}
+    with pytest.raises(ValueError, match="single-model"):
+        Planner(backend="milp").plan(profs, tables, CLUSTER)
+
+
+def test_deprecated_core_shims_resolve_and_warn():
+    """The old deep import paths keep working (resolving to the controlplane
+    implementations) but warn on attribute access."""
+    import repro.controlplane.baselines as cb
+    import repro.controlplane.milp as cm_
+    import repro.controlplane.templates as ct
+    import repro.core.baselines as shim_b
+    import repro.core.enumerate as shim_e
+    import repro.core.milp as shim_m
+
+    with pytest.warns(DeprecationWarning):
+        assert shim_m.solve_milp is cm_.solve_milp
+    with pytest.warns(DeprecationWarning):
+        assert shim_e.plan_cluster is ct.plan_cluster
+    with pytest.warns(DeprecationWarning):
+        assert shim_b.plan_dart_r is cb.plan_dart_r
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore: analytic parity and measured-speed determinism
+# ---------------------------------------------------------------------------
+
+
+def test_profile_store_measured_equals_analytic_without_drift():
+    """lat_scale == 1.0 everywhere => measured table is float-identical to
+    the analytic one, so planning from it is exact parity."""
+    prof = _profile(slo=0.025)
+    store = _store({"m": prof})
+    plan = Planner().plan({"m": prof}, store.tables("analytic"), CLUSTER)
+    rt = build_runtime(plan, {"m": prof})
+    n = store.ingest(rt)
+    assert n > 0
+    assert store.measured_table("m").lat == store.analytic_table("m").lat
+    plan2 = Planner().plan({"m": prof}, store.tables("measured"), CLUSTER)
+    assert plan2.throughput == pytest.approx(plan.throughput, rel=1e-9)
+
+
+def test_profile_store_harvests_feedback_scale_deterministically():
+    prof = _profile(slo=0.025)
+    store = _store({"m": prof})
+    plan = Planner().plan({"m": prof}, store.tables("analytic"), CLUSTER)
+    rt = build_runtime(plan, {"m": prof})
+    # a FeedbackController would fold a persistent 2x slowdown in like this
+    slow = rt.pipelines[0].stages[0]
+    slow.lat_scale = 2.0
+    sp = rt.plan.pipelines[0].stages[0]
+    store.ingest(rt)
+    base = store.analytic_table("m")
+    meas = store.measured_table("m")
+    key_b = sorted(b for b in slow.latency_by_batch if b in base.batch_sizes)
+    assert key_b
+    for b in key_b:
+        assert store.scale_for("m", sp.accel_class, sp.vfrac, b) == pytest.approx(2.0)
+        for blk in range(sp.block_start, sp.block_end):
+            assert meas.lat[(blk, sp.accel_class, sp.vfrac, b)] == pytest.approx(
+                2.0 * base.lat[(blk, sp.accel_class, sp.vfrac, b)])
+    # deterministic: ingesting the same runtime again changes nothing, and
+    # planning twice from the measured store yields the same optimum
+    scales = dict(store.scales)
+    store.ingest(rt)
+    assert store.scales == scales
+    p1 = Planner().plan({"m": prof}, store.tables("measured"), CLUSTER)
+    p2 = Planner().plan({"m": prof}, store.tables("measured"), CLUSTER)
+    assert p1.throughput == pytest.approx(p2.throughput, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Live re-planning: drain-and-swap + drift-triggered ReplanLoop
+# ---------------------------------------------------------------------------
+
+
+def test_swap_plan_preserves_inflight_batches_and_telemetry():
+    prof = _profile(slo=0.03, n_blocks=5)
+    store = _store({"m": prof})
+    plan_a = Planner().plan({"m": prof}, store.tables(), CLUSTER)
+    plan_b = Planner(backend="np").plan({"m": prof}, store.tables(), CLUSTER)
+    dp = DataPlane(build_runtime(plan_a, {"m": prof}))
+    trace = poisson_trace(plan_a.throughput * 0.8, 1.5, prof.slo_s, "m", seed=3)
+    state = {}
+
+    def hook(req, t):
+        if not state and t > 0.4 and dp.jobs:
+            state["inflight_reqs"] = {
+                r.req_id for j in dp.jobs.values() for r in j.requests
+            }
+            state["t"] = t
+            dp.swap_plan(plan_b, {"m": prof}, now=t, reason="test")
+
+    dp.arrival_hooks.append(hook)
+    tel = dp.serve(trace)
+    assert state and state["inflight_reqs"], "swap never saw in-flight batches"
+    assert tel.plan_swaps == 1
+    assert tel.swap_log and tel.swap_log[0][0] == pytest.approx(state["t"])
+    # continuity: every request has exactly one outcome, nothing lost in swap
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+    # zero in-flight drops: every batch in flight at swap time completed
+    done = {o.req_id for o in tel.outcomes if o.completion_s is not None}
+    assert state["inflight_reqs"] <= done
+    # the new plan serves the tail of the trace too
+    post_swap = [o for o in tel.outcomes
+                 if o.completion_s is not None and o.arrival_s > state["t"]]
+    assert post_swap
+    # merged utilization spans both plan epochs
+    assert set(tel.utilization) == set(CLUSTER.counts)
+    assert sum(tel.utilization.values()) > 0.0
+
+
+def test_swap_plan_outcomes_complete_when_new_plan_drops_a_model():
+    """Swapping to a plan that no longer serves a model must still give every
+    carried (queued) request of that model a drop outcome — even under the
+    permissive policy whose feasibility check is off."""
+    from repro.dataplane import AdmissionPolicy
+
+    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    store = _store(profs)
+    plan_ab = Planner().plan(profs, store.tables(), CLUSTER)
+    assert plan_ab.throughput_of("m1") > 0
+    plan_a = Planner().plan({"m0": profs["m0"]}, {"m0": store.table("m0")},
+                            CLUSTER)
+    dp = DataPlane(build_runtime(plan_ab, profs),
+                   policy=AdmissionPolicy.permissive())
+    # m1 trickles in slowly with loose SLOs so requests linger in the queue
+    # waiting to batch; m0 arrivals after t=0.5 trigger the swap hook
+    m1 = poisson_trace(plan_ab.throughput_of("m1") * 0.25, 1.0,
+                       profs["m1"].slo_s * 8, "m1", seed=2)
+    m0 = [replace(r, arrival_s=r.arrival_s + 0.5, deadline_s=r.deadline_s + 0.5,
+                  req_id=r.req_id + 5_000_000)
+          for r in poisson_trace(plan_ab.throughput_of("m0") * 0.3, 0.8,
+                                 profs["m0"].slo_s * 8, "m0", seed=3)]
+    trace = sorted(m1 + m0)
+    state = {}
+
+    def hook(req, t):
+        if not state and t > 0.5 and dp.batcher.pending("m1") > 0:
+            state["pending_m1"] = dp.batcher.pending("m1")
+            dp.swap_plan(plan_a, profs, now=t, reason="drop-m1")
+
+    dp.arrival_hooks.append(hook)
+    tel = dp.serve(trace)
+    assert state and state["pending_m1"] > 0, "no m1 requests queued at swap"
+    # nothing silently lost: one outcome per request, queued m1 got drops
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+
+
+def test_swap_plan_is_atomic_when_dispatcher_factory_raises():
+    """A failing dispatcher_factory must leave the plane fully on the old
+    plan: no epoch bump, no drained queues, every request still outcomes."""
+    prof = _profile(slo=0.03, n_blocks=5)
+    store = _store({"m": prof})
+    plan = Planner().plan({"m": prof}, store.tables(), CLUSTER)
+    dp = DataPlane(build_runtime(plan, {"m": prof}))
+    trace = poisson_trace(plan.throughput * 0.5, 1.0, prof.slo_s, "m", seed=4)
+    state = {}
+
+    def boom(rt):
+        raise RuntimeError("executor build failed")
+
+    def hook(req, t):
+        if not state and t > 0.3:
+            state["t"] = t
+            with pytest.raises(RuntimeError, match="executor build failed"):
+                dp.swap_plan(plan, {"m": prof}, now=t, dispatcher_factory=boom)
+
+    dp.arrival_hooks.append(hook)
+    tel = dp.serve(trace)
+    assert state, "hook never fired"
+    assert dp.epoch == 0 and tel.plan_swaps == 0
+    assert len(tel.outcomes) == len(trace)
+
+
+def test_replan_loop_triggers_on_mix_drift_and_improves_fit():
+    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    store = _store(profs)
+    planner = Planner(objective=Objective(slo_margin=0.4, max_partitions=2))
+    # initial plan solved for an m0-dominant mix
+    plan0 = planner.plan(
+        profs, store.tables(), CLUSTER,
+        objective=planner.objective.with_weights({"m0": 0.9, "m1": 0.1}),
+    )
+    rate = plan0.throughput * 0.8
+    slos = {m: p.slo_s for m, p in profs.items()}
+    first = multi_model_trace({"m0": rate * 0.9, "m1": rate * 0.1}, 1.0, slos,
+                              seed=1)
+    second_raw = multi_model_trace({"m0": rate * 0.1, "m1": rate * 0.9}, 1.0,
+                                   slos, seed=2)
+    second = [replace(r, arrival_s=r.arrival_s + 1.0,
+                      deadline_s=r.deadline_s + 1.0,
+                      req_id=r.req_id + 10_000_000)
+              for r in second_raw]
+    trace = sorted(first + second)
+
+    dp = DataPlane(build_runtime(plan0, profs))
+    loop = ReplanLoop(
+        planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
+        config=ReplanConfig(window_s=0.4, check_interval_s=0.2,
+                            min_requests=8, mix_drift=0.3, max_swaps=2),
+    ).attach()
+    loop.set_baseline({"m0": rate * 0.9, "m1": rate * 0.1})
+    tel = dp.serve(trace)
+
+    assert loop.events, "drift never triggered a re-plan"
+    assert tel.plan_swaps == len(loop.events)
+    assert len(tel.outcomes) == len(trace)
+    # the re-solved plan leans into the new mix: m1 gets more planned
+    # throughput than the m0-solved plan gave it (swap_plan validated it)
+    new_plan = dp.rt.plan
+    assert new_plan.throughput_of("m1") > plan0.throughput_of("m1") - 1e-9
+    ev = loop.events[0]
+    assert ev.weights["m1"] > ev.weights["m0"]

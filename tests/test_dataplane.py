@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import blocks, costmodel as cm
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster
 from repro.core.reservation import probe
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
@@ -297,8 +297,8 @@ def test_real_dataplane_serves_trace_with_overlap(real_pipeline):
                     ).serve(trace)
     assert len(tel.outcomes) == len(trace)
     assert tel.inflight_hwm > 1  # overlap actually happened
-    # real execution measured for both stages of the pipeline
-    assert (0, 0) in tel.stage_wall_s and (0, 1) in tel.stage_wall_s
+    # real execution measured for both stages of the pipeline (epoch 0)
+    assert (0, 0, 0) in tel.stage_wall_s and (0, 0, 1) in tel.stage_wall_s
     assert all(w >= 0 for ws in tel.stage_wall_s.values() for w in ws)
     assert tel.attainment > 0.9  # low virtual load on a valid plan
 

@@ -4,9 +4,8 @@ import numpy as np
 import pytest
 
 from repro.core import blocks, costmodel as cm
-from repro.core.baselines import plan_dart_r, plan_np
-from repro.core.enumerate import enumerate_templates, plan_cluster
-from repro.core.milp import solve_milp
+from repro.controlplane import enumerate_templates
+from repro.core import plan_cluster, plan_dart_r, plan_np, solve_milp
 from repro.core.types import ClusterSpec, LayerCost
 
 

@@ -4,7 +4,7 @@ import numpy as np
 from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import blocks, costmodel as cm
-from repro.core.enumerate import plan_cluster
+from repro.core import plan_cluster
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation
 from repro.core.types import ClusterSpec
