@@ -22,9 +22,11 @@ from pathlib import Path
 from repro.controlplane import (
     Objective,
     Planner,
+    PolicyConfig,
     ProfileStore,
     ReplanConfig,
     ReplanLoop,
+    ReplanPolicy,
 )
 from repro.core import plan_cluster, plan_dart_r, plan_np
 from repro.core.runtime import build_runtime
@@ -101,16 +103,31 @@ def run(group="G1", cluster_name="HC1-L", bursty=False, quick=False):
     return rows
 
 
-def _shifted_mix_trace(rates_a, rates_b, half_s, slos, seed=0):
-    """Arrival trace whose model mix flips at t = half_s (workload drift)."""
-    first = multi_model_trace(rates_a, half_s, slos, seed=seed)
-    second = [
-        replace(r, arrival_s=r.arrival_s + half_s,
-                deadline_s=r.deadline_s + half_s,
-                req_id=r.req_id + 100_000_000)
-        for r in multi_model_trace(rates_b, half_s, slos, seed=seed + 17)
-    ]
-    return sorted(first + second)
+def _segmented_mix_trace(rates_list, seg_s, slos, seed=0):
+    """Arrival trace stitched from per-segment rate dicts: segment i runs
+    `rates_list[i]` for `seg_s` seconds.  Two segments = the classic
+    mid-trace mix flip; alternating segments = an oscillating workload."""
+    out = []
+    for i, rates in enumerate(rates_list):
+        seg = multi_model_trace(rates, seg_s, slos, seed=seed + 17 * i)
+        out.extend(
+            replace(r, arrival_s=r.arrival_s + i * seg_s,
+                    deadline_s=r.deadline_s + i * seg_s,
+                    req_id=r.req_id + (i + 1) * 100_000_000)
+            for r in seg
+        )
+    return sorted(out)
+
+
+def _tel_detail(tel):
+    return {
+        "attainment": tel.attainment,
+        "goodput_rps": tel.goodput_rps,
+        "served": tel.served,
+        "plan_swaps": tel.plan_swaps,
+        "epochs_gcd": tel.epochs_gcd,
+        "utilization_by_class": dict(tel.utilization),
+    }
 
 
 def run_drift(cluster_name="HC1-S", quick=False, seed=0):
@@ -118,9 +135,14 @@ def run_drift(cluster_name="HC1-S", quick=False, seed=0):
 
     The plan is solved for an A-dominant mix; halfway through the trace the
     mix flips to B-dominant.  The static run keeps serving on the stale plan;
-    the re-planned run carries a `ReplanLoop` whose drift monitor detects the
-    flip, re-solves through the Planner facade at the observed mix, and
-    installs the new plan with a live `swap_plan` (no in-flight drops).
+    the re-planned runs carry a `ReplanLoop` (gated by a `ReplanPolicy`)
+    whose drift monitor detects the flip, re-solves through the Planner
+    facade at the observed mix, and installs the new plan with a live
+    `swap_plan` (no in-flight drops).  The re-solve is priced twice: from
+    the analytic tables and end-to-end from `ProfileStore.ingest`'d measured
+    speed (`source="measured"` + reprice_runtime) — on an uncalibrated
+    runtime the two are float-identical, so the recorded attainment delta
+    doubles as live parity evidence for the measured path.
     """
     cluster = HC_SMALL[cluster_name]
     archs = GROUPS["G1"][:2]
@@ -139,31 +161,41 @@ def run_drift(cluster_name="HC1-S", quick=False, seed=0):
     half = 2.0 if quick else 4.0
     rates_a = {m: rate * mix_a[m] for m in archs}
     rates_b = {m: rate * mix_b[m] for m in archs}
-    trace = _shifted_mix_trace(rates_a, rates_b, half, slos, seed=seed)
+    trace = _segmented_mix_trace([rates_a, rates_b], half, slos, seed=seed)
 
     t0 = time.perf_counter()
     tel_static = serve_trace(build_runtime(plan0, profiles), trace)
     static_wall = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    dp = DataPlane(build_runtime(plan0, profiles))
-    loop = ReplanLoop(
-        planner=planner, store=store, cluster=cluster, dataplane=dp,
-        config=ReplanConfig(window_s=0.5, check_interval_s=0.25,
-                            min_requests=12, mix_drift=0.25, max_swaps=2),
-    ).attach()
-    loop.set_baseline(rates_a)
-    tel_replan = dp.serve(trace)
-    replan_wall = time.perf_counter() - t0
+    def replanned(source):
+        rt0 = build_runtime(plan0, profiles)
+        if source == "measured":
+            # harvest the serving runtime's calibrated speeds (lat_scale x
+            # latency_by_batch) so the drift re-solve prices stages from
+            # measured tables end-to-end
+            store.ingest(rt0)
+        t0 = time.perf_counter()
+        dp = DataPlane(rt0)
+        loop = ReplanLoop(
+            planner=planner, store=store, cluster=cluster, dataplane=dp,
+            config=ReplanConfig(window_s=0.5, check_interval_s=0.25,
+                                min_requests=12, mix_drift=0.25, max_swaps=2,
+                                source=source),
+            # short base cooldown: a genuine shift legitimately wants one
+            # quick refinement re-solve once the post-flip window is clean;
+            # oscillation protection comes from the damper stretch.  Pinned
+            # solver cost (cost_ewma=0) keeps gate verdicts — and these
+            # bench numbers — independent of host speed.
+            policy=ReplanPolicy(PolicyConfig(cooldown_s=0.25,
+                                             solver_wall_init_s=0.2,
+                                             cost_ewma=0.0)),
+        ).attach()
+        loop.set_baseline(rates_a)
+        tel = dp.serve(trace)
+        return loop, tel, time.perf_counter() - t0
 
-    def detail(tel):
-        return {
-            "attainment": tel.attainment,
-            "goodput_rps": tel.goodput_rps,
-            "served": tel.served,
-            "plan_swaps": tel.plan_swaps,
-            "utilization_by_class": dict(tel.utilization),
-        }
+    loop, tel_replan, replan_wall = replanned("analytic")
+    loop_m, tel_meas, meas_wall = replanned("measured")
 
     return {
         "cluster": cluster_name,
@@ -173,11 +205,94 @@ def run_drift(cluster_name="HC1-S", quick=False, seed=0):
         "rate_rps": rate,
         "horizon_s": 2 * half,
         "trace": describe(trace).as_dict(),
-        "static": {**detail(tel_static), "wall_s": static_wall},
-        "replanned": {**detail(tel_replan), "wall_s": replan_wall},
+        "static": {**_tel_detail(tel_static), "wall_s": static_wall},
+        "replanned": {**_tel_detail(tel_replan), "wall_s": replan_wall},
+        "replanned_measured": {**_tel_detail(tel_meas), "wall_s": meas_wall,
+                               "replan_events": len(loop_m.events)},
         "replan_events": len(loop.events),
         "delta_attainment": tel_replan.attainment - tel_static.attainment,
         "delta_goodput_rps": tel_replan.goodput_rps - tel_static.goodput_rps,
+        # float-level parity of the measured-priced control path on an
+        # uncalibrated runtime (ROADMAP: measured-profile drift benchmark)
+        "measured_vs_analytic_delta": tel_meas.attainment - tel_replan.attainment,
+    }
+
+
+def run_oscillation(cluster_name="HC1-S", quick=False, seed=0):
+    """Replan governance under an adversarial oscillating mix (A->B->A->...).
+
+    The ungated `ReplanLoop` re-solves on every drift trip — the
+    always-replan upper bound on attainment and the worst case for plan
+    churn.  The gated loop carries a `ReplanPolicy` (cost/benefit gate +
+    cooldown + oscillation damper): it should cut plan swaps by >= 3x while
+    staying within ~2% attainment of the upper bound.
+    """
+    cluster = HC_SMALL[cluster_name]
+    archs = GROUPS["G1"][:2]
+    a, b = archs
+    profiles, tables = make_setup(archs, cluster)
+    store = ProfileStore(cluster)
+    for name in archs:
+        store.add(profiles[name], tables[name])
+    planner = Planner(objective=Objective(slo_margin=0.4))
+    mix_a = {a: 0.65, b: 0.35}
+    mix_b = {a: 0.35, b: 0.65}
+    plan0 = planner.plan(profiles, tables, cluster,
+                         objective=planner.objective.with_weights(mix_a))
+    rate = plan0.throughput * 0.65
+    slos = {m: profiles[m].slo_s for m in archs}
+    seg_s = 0.75 if quick else 1.0
+    n_seg = 6 if quick else 8
+    rates = [{m: rate * (mix_a if i % 2 == 0 else mix_b)[m] for m in archs}
+             for i in range(n_seg)]
+    trace = _segmented_mix_trace(rates, seg_s, slos, seed=seed)
+
+    def serve_with(policy):
+        t0 = time.perf_counter()
+        dp = DataPlane(build_runtime(plan0, profiles))
+        loop = ReplanLoop(
+            planner=planner, store=store, cluster=cluster, dataplane=dp,
+            config=ReplanConfig(window_s=0.5, check_interval_s=0.25,
+                                min_requests=12, mix_drift=0.25),
+            policy=policy,
+        ).attach()
+        loop.set_baseline(rates[0])
+        tel = dp.serve(trace)
+        return loop, tel, time.perf_counter() - t0
+
+    _, tel_u, wall_u = serve_with(None)
+    # gain_cost_ratio 2: an oscillating re-solve must promise twice its
+    # priced cost before the solver runs; the damper stretch then spaces
+    # whatever still gets through.  Pinned solver cost (cost_ewma=0) keeps
+    # verdicts host-speed independent (see PolicyConfig axis caveat).
+    policy = ReplanPolicy(PolicyConfig(cooldown_s=0.75, damper_alpha=0.5,
+                                       damper_stretch_s=4.0,
+                                       gain_cost_ratio=2.0,
+                                       solver_wall_init_s=0.2,
+                                       cost_ewma=0.0))
+    _, tel_g, wall_g = serve_with(policy)
+
+    return {
+        "cluster": cluster_name,
+        "models": archs,
+        "rate_rps": rate,
+        "horizon_s": n_seg * seg_s,
+        "segment_s": seg_s,
+        "trace": describe(trace).as_dict(),
+        "ungated": {**_tel_detail(tel_u), "wall_s": wall_u},
+        "gated": {**_tel_detail(tel_g), "wall_s": wall_g,
+                  "decisions": len(tel_g.replan_decisions),
+                  "rejected": sum(1 for d in tel_g.replan_decisions
+                                  if not d["accepted"]),
+                  "flip_score": policy.flip_score},
+        # raw counts; reduction divides by max(gated, 1) only — an ungated
+        # loop that never swapped yields reduction 0.0, flagging the
+        # scenario as degenerate rather than fabricating a ratio
+        "swap_reduction": tel_u.plan_swaps / max(tel_g.plan_swaps, 1),
+        "delta_attainment_vs_ungated":
+            tel_g.attainment - tel_u.attainment,
+        "swaps_ungated": tel_u.plan_swaps,
+        "swaps_gated": tel_g.plan_swaps,
     }
 
 
@@ -219,11 +334,22 @@ def main(quick=False):
         f"static_attain={drift['static']['attainment']:.3f};"
         f"replanned_attain={drift['replanned']['attainment']:.3f};"
         f"delta={drift['delta_attainment']:+.3f};"
-        f"swaps={drift['replanned']['plan_swaps']}"
+        f"swaps={drift['replanned']['plan_swaps']};"
+        f"measured_delta={drift['measured_vs_analytic_delta']:+.4f}"
+    )
+    osc = run_oscillation(quick=quick)
+    out.append(
+        f"e2e_oscillation[{osc['cluster']}|{'<->'.join(osc['models'])}],"
+        f"{(osc['ungated']['wall_s'] + osc['gated']['wall_s'])*1e6:.0f},"
+        f"swaps_ungated={osc['swaps_ungated']};"
+        f"swaps_gated={osc['swaps_gated']};"
+        f"swap_reduction={osc['swap_reduction']:.1f}x;"
+        f"gated_attain={osc['gated']['attainment']:.3f};"
+        f"delta_vs_ungated={osc['delta_attainment_vs_ungated']:+.3f}"
     )
     BENCH_JSON.write_text(json.dumps(
         {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
-         "rows": results, "drift": drift}, indent=2))
+         "rows": results, "drift": drift, "oscillation": osc}, indent=2))
     out.append(f"e2e_json,0,wrote={BENCH_JSON}")
     return out
 

@@ -14,7 +14,9 @@ One facade, two cadences:
                 from measured calibration/feedback, so re-solves price stages
                 at observed speed
   replan.py     `ReplanLoop`/`DriftMonitor` — online workload-drift detection
-                driving periodic re-solves and live `DataPlane.swap_plan`
+                driving periodic re-solves and live `DataPlane.swap_plan`;
+                `ReplanPolicy` — the governance gate between them
+                (cost/benefit pricing, cooldown, oscillation damper)
 
 The old deep import paths (`repro.core.milp`, `repro.core.enumerate`,
 `repro.core.baselines`) keep working through deprecation shims.
@@ -26,9 +28,12 @@ from .planner import BACKENDS, Objective, Planner  # noqa: F401
 from .profiles import ProfileStore  # noqa: F401
 from .replan import (  # noqa: F401
     DriftMonitor,
+    PolicyConfig,
     ReplanConfig,
+    ReplanDecision,
     ReplanEvent,
     ReplanLoop,
+    ReplanPolicy,
     mix_distance,
 )
 from .templates import (  # noqa: F401

@@ -19,6 +19,7 @@ upper bound) of the last solve stays available as `Planner.last_result`.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace as _replace
 
 from repro.core.costmodel import LatencyTable
@@ -100,6 +101,10 @@ class Planner:
     objective: Objective = field(default_factory=Objective)
     validate: bool = True
     last_result: PlanningResult | None = field(default=None, repr=False)
+    # facade-level wall time of the last solve (solver + validation): what a
+    # re-solve actually costs the control loop, fed to the replan policy's
+    # cost EWMA (plan.solver_wall_s is the solver-internal time only)
+    last_wall_s: float = 0.0
 
     def __post_init__(self) -> None:
         if self.backend not in BACKENDS:
@@ -115,8 +120,10 @@ class Planner:
         objective: Objective | None = None,
     ) -> ClusterPlan:
         obj = objective or self.objective
+        t0 = time.perf_counter()
         result = BACKENDS[self.backend](profiles, tables, cluster, obj)
         if self.validate:
             result.plan.validate(profiles, slo_margin=obj.slo_margin)
+        self.last_wall_s = time.perf_counter() - t0
         self.last_result = result
         return result.plan

@@ -162,6 +162,35 @@ class ProfileStore:
                     for b, t in stage.latency_by_batch.items()
                 }
 
+    def request_cost(self, name: str, source: str = "analytic") -> float:
+        """Chip-seconds one request of `name` consumes, as an exchange rate.
+
+        Full-model latency on the cheapest class, priced whole-chip
+        (v = min vfracs, i.e. the coarsest split) at the largest profiled
+        batch, amortized per request.  This is the rate the replan policy
+        uses to convert per-model throughput into fungible capacity units
+        when estimating what a re-solve could redistribute — an estimate
+        (it ignores partitioning/SLO/interference structure), not a bound.
+        Runs on the control loop's per-check path, so the measured variant
+        re-prices just the needed partitions through `scale_for` instead of
+        materializing the dense measured table (block-uniform per
+        (class, v, b) key, so the result is identical).
+        """
+        tbl = self.analytic_table(name)
+        b = max(tbl.batch_sizes)
+        v = min(tbl.vfracs)
+        n = tbl.profile.n_blocks
+        if source == "measured":
+            means = self._fallback_means(name)
+            lat = min(tbl.partition(0, n, cls, v, b)
+                      * self.scale_for(name, cls, v, b, means)
+                      for cls in tbl.classes)
+        elif source == "analytic":
+            lat = min(tbl.partition(0, n, cls, v, b) for cls in tbl.classes)
+        else:
+            raise ValueError(f"source must be analytic|measured, got {source!r}")
+        return lat / (v * b)
+
     def table(self, name: str, source: str = "analytic") -> LatencyTable:
         if source == "analytic":
             return self.analytic_table(name)

@@ -11,10 +11,19 @@ closes that loop over the live data plane:
   the baseline the active plan was solved for and, past the drift
   thresholds, re-solves through the `Planner` facade (optionally at measured
   `ProfileStore` speed) and installs the result via
-  `DataPlane.swap_plan` — in-flight batches finish on the old pools.
+  `DataPlane.swap_plan` — in-flight batches finish on the old pools;
+* `ReplanPolicy` — the governance layer between the two: a cost/benefit
+  gate (estimated goodput gain vs. solver wall time + measured swap
+  transient) with a cooldown window and an oscillation damper, so the
+  paper's assumption that plan installs are rare, bounded-cost events
+  survives adversarial (oscillating) workloads.  Accept/reject decisions
+  land in `Telemetry.replan_decisions`.
 
 Everything runs on the data plane's virtual clock, so the loop behaves
-identically under simulation replay and real serving.
+identically under simulation replay and real serving — with one deliberate
+exception: the `ReplanPolicy` gate prices solver *wall* time, which matches
+the virtual axis only on a calibrated runtime; pin it (`cost_ewma=0`) when
+replay determinism matters (see the PolicyConfig axis caveat).
 """
 
 from __future__ import annotations
@@ -110,6 +119,224 @@ class ReplanEvent:
     throughput_rps: float
 
 
+# ---------------------------------------------------------------------------
+# Replan governance: the cost/benefit gate + hysteresis (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Knobs of the replan cost/benefit gate and its hysteresis.
+
+    The gate accepts a drift-triggered re-solve only when the estimated
+    goodput gain pays for the disruption:
+
+        benefit_rps  >  max(min_gain_rps,
+                            gain_cost_ratio * cost_s * rate_rps / amortize_s)
+
+    where `cost_s` is the EWMA'd solver wall time plus the EWMA'd measured
+    swap transient (virtual seconds the new epoch inherits as residual
+    occupancy) — i.e. a swap must win back, over `amortize_s`, at least the
+    requests it puts at risk while the solver runs and the pools drain.
+    After every accepted swap a cooldown of
+
+        cooldown_s + damper_stretch_s * flip_score
+
+    suppresses further solves.  The base `cooldown_s` is a churn guard only
+    (a genuine shift may legitimately want a quick refinement re-solve once
+    the post-flip window is clean); the real hysteresis is the additive
+    stretch: `flip_score` is an EWMA (weight `damper_alpha`) of a per-swap
+    oscillation indicator — 1 when the swap returned to the mix the
+    *previous* swap moved away from — so a workload that keeps bouncing
+    A->B->A->B stretches its own cooldown toward
+    `cooldown_s + damper_stretch_s` instead of thrashing plans, while a
+    genuine sustained shift decays the score back and re-plans at the base
+    cadence.
+
+    Axis caveat: the swap transient is virtual seconds, but the solver wall
+    is wall-clock — the two coincide exactly only on a calibrated runtime
+    (where virtual time IS wall time).  In pure simulation replay the wall
+    component makes gate verdicts host-speed dependent; pin it for
+    deterministic replay with `cost_ewma=0` + a fixed `solver_wall_init_s`
+    (what the benchmarks do).
+    """
+
+    cooldown_s: float = 0.5  # base spacing between accepted swaps (virtual s)
+    amortize_s: float = 4.0  # horizon over which a swap must pay off
+    gain_cost_ratio: float = 1.0  # required benefit per unit of priced cost
+    min_gain_rps: float = 0.0  # absolute goodput-gain floor
+    damper_alpha: float = 0.5  # EWMA weight of the oscillation indicator
+    damper_stretch_s: float = 4.0  # extra cooldown at flip_score == 1
+    solver_wall_init_s: float = 0.05  # cost prior before any solve was timed
+    cost_ewma: float = 0.5  # EWMA weight for solver-wall/transient updates
+
+
+@dataclass
+class ReplanDecision:
+    """One considered re-solve — accepted or not, it is a control action."""
+
+    t_s: float
+    accepted: bool
+    reason: str
+    benefit_rps: float = 0.0
+    required_rps: float = 0.0
+    cost_s: float = 0.0
+    flip_score: float = 0.0
+    cooldown_until_s: float = float("-inf")
+
+    def as_dict(self) -> dict:
+        return {
+            "t_s": self.t_s,
+            "accepted": self.accepted,
+            "reason": self.reason,
+            "benefit_rps": self.benefit_rps,
+            "required_rps": self.required_rps,
+            "cost_s": self.cost_s,
+            "flip_score": self.flip_score,
+            # None (not -inf) before the first swap: keeps telemetry dumps
+            # strict-JSON safe
+            "cooldown_until_s": (None if self.cooldown_until_s == float("-inf")
+                                 else self.cooldown_until_s),
+        }
+
+
+class ReplanPolicy:
+    """Cost/benefit gate + hysteresis between drift detection and the solver.
+
+    `consider()` is cheap (no solver call): it estimates what a re-solve at
+    the observed mix could buy and compares that against the priced cost of
+    getting there.  The benefit estimate converts the current plan's
+    per-model throughput into fungible capacity units via
+    `ProfileStore.request_cost` (best-case chip-seconds per request), assumes
+    a re-solve can redistribute those units to match the observed mix, and
+    takes the goodput delta over what the current plan already attains — an
+    optimistic estimate by construction, which errs on the side of letting
+    the exact solver decide, while still zeroing out re-solves for mixes the
+    current plan serves fine.
+
+    State transitions happen only on `notify_swap` (accepted + installed) and
+    never on failed solves — `notify_failure` leaves the cooldown and damper
+    untouched, so one failed event cannot suppress or double-count the next.
+    """
+
+    def __init__(self, config: PolicyConfig | None = None) -> None:
+        self.config = config or PolicyConfig()
+        self.decisions: list[ReplanDecision] = []
+        self.flip_score = 0.0
+        self.solver_wall_s = self.config.solver_wall_init_s
+        self.transient_s = 0.0
+        self.failures = 0
+        self._cooldown_until = float("-inf")
+        self._prev_mix: dict[str, float] | None = None  # mix before last swap
+        # cooldown window whose rejection is already on record: consider()
+        # returns the recorded decision instead of appending a duplicate,
+        # so a drift that stays tripped produces one decision per window,
+        # not one per check (bounded telemetry on long traces)
+        self._reject_logged_until = float("-inf")
+
+    @property
+    def cooldown_until(self) -> float:
+        return self._cooldown_until
+
+    # ------------------------------------------------------------- estimate
+    def estimate_benefit(self, rates: dict[str, float], plan: ClusterPlan,
+                         store: ProfileStore, source: str = "analytic") -> float:
+        """Goodput (rps) a mix-matched re-solve could add over the current
+        plan, assuming capacity redistributes at `request_cost` exchange
+        rates.  Models the plan serves but the workload dropped free their
+        capacity; models the plan under-serves claim it back."""
+        total = sum(rates.values())
+        if total <= 0:
+            return 0.0
+        models = sorted(set(store.profiles) | set(rates))
+        costs = {m: store.request_cost(m, source) for m in models
+                 if m in store.profiles}
+        attain_now = sum(min(rates.get(m, 0.0), plan.throughput_of(m))
+                         for m in models)
+        capacity = sum(plan.throughput_of(m) * costs.get(m, 0.0)
+                       for m in models)
+        unit = sum((rates.get(m, 0.0) / total) * costs.get(m, 0.0)
+                   for m in models)
+        if unit <= 0.0 or capacity <= 0.0:
+            return 0.0
+        candidate = min(total, capacity / unit)
+        return max(0.0, candidate - attain_now)
+
+    # ------------------------------------------------------------- decision
+    def consider(self, now: float, rates: dict[str, float], plan: ClusterPlan,
+                 store: ProfileStore, source: str = "analytic") -> ReplanDecision:
+        """Gate one drift trip.  Returns the decision; appends it to
+        `decisions` unless it merely repeats the current window's recorded
+        rejection (callers can detect a fresh decision by list growth)."""
+        cfg = self.config
+        if now < self._cooldown_until:
+            if self._cooldown_until <= self._reject_logged_until:
+                return self.decisions[-1]  # this window is already on record
+            d = ReplanDecision(
+                t_s=now, accepted=False, reason="cooldown",
+                flip_score=self.flip_score,
+                cooldown_until_s=self._cooldown_until,
+            )
+            self.decisions.append(d)
+            self._reject_logged_until = self._cooldown_until
+            return d
+        total = sum(rates.values())
+        benefit = self.estimate_benefit(rates, plan, store, source)
+        cost_s = self.solver_wall_s + self.transient_s
+        required = max(cfg.min_gain_rps,
+                       cfg.gain_cost_ratio * cost_s * total / cfg.amortize_s)
+        accepted = benefit > required
+        d = ReplanDecision(
+            t_s=now, accepted=accepted,
+            reason="gain" if accepted else "marginal",
+            benefit_rps=benefit, required_rps=required, cost_s=cost_s,
+            flip_score=self.flip_score, cooldown_until_s=self._cooldown_until,
+        )
+        self.decisions.append(d)
+        if not accepted:
+            # not-worth-it drift: hold off re-pricing for one base cooldown
+            # (no damper).  The drift stays *pending* — a later, cleaner
+            # window may legitimately price the same shift profitable (e.g.
+            # right after a flip the estimation window still blends the old
+            # mix) — but it is re-priced at cooldown cadence, not every
+            # check, so a permanently-marginal workload cannot spam the
+            # solver gate or the decision log.
+            self._cooldown_until = max(self._cooldown_until,
+                                       now + cfg.cooldown_s)
+            self._reject_logged_until = self._cooldown_until
+        return d
+
+    # ------------------------------------------------------------ feedback
+    def notify_swap(self, now: float, old_mix: dict[str, float],
+                    new_mix: dict[str, float], solver_wall_s: float,
+                    transient_s: float) -> None:
+        """An accepted re-solve was installed: fold the measured costs into
+        the EWMAs, update the oscillation damper, open the cooldown."""
+        cfg = self.config
+        a = cfg.cost_ewma
+        self.solver_wall_s += a * (max(solver_wall_s, 0.0) - self.solver_wall_s)
+        self.transient_s += a * (max(transient_s, 0.0) - self.transient_s)
+        flip = 0.0
+        if self._prev_mix is not None:
+            # the swap moved the plan *back* toward the mix the previous
+            # swap abandoned: that is one oscillation period
+            if mix_distance(new_mix, self._prev_mix) < \
+                    mix_distance(new_mix, old_mix) - 1e-12:
+                flip = 1.0
+        self.flip_score += cfg.damper_alpha * (flip - self.flip_score)
+        self._prev_mix = dict(old_mix)
+        self._cooldown_until = now + cfg.cooldown_s + (
+            cfg.damper_stretch_s * self.flip_score)
+
+    def notify_failure(self, now: float) -> None:
+        """A gated-through re-solve failed downstream (solver exception or
+        infeasible).  Deliberately does NOT touch the cooldown, the damper or
+        the cost EWMAs: the failure is the ReplanLoop's event to count
+        (exactly once), and a failed solve must neither extend nor reset the
+        hysteresis window of the next genuine one."""
+        self.failures += 1
+
+
 @dataclass
 class ReplanLoop:
     """The slow half of the two-cadence system, wired to a live DataPlane."""
@@ -121,6 +348,9 @@ class ReplanLoop:
     config: ReplanConfig = field(default_factory=ReplanConfig)
     objective: Objective | None = None
     dispatcher_factory: object = None  # factory(new_runtime) -> PoolDispatcher
+    # cost/benefit gate + hysteresis between drift and the solver; None keeps
+    # the ungated re-solve-on-every-trip behaviour (benchmarks compare both)
+    policy: ReplanPolicy | None = None
     events: list[ReplanEvent] = field(default_factory=list)
 
     def __post_init__(self) -> None:
@@ -165,7 +395,9 @@ class ReplanLoop:
         return rate_rel > self.config.rate_drift or mix_tv > self.config.mix_drift
 
     def maybe_replan(self, now: float) -> ClusterPlan | None:
-        """Drift check at the configured cadence; re-solve + hot-swap on trip."""
+        """Drift check at the configured cadence; past the thresholds, the
+        policy gate (when present) prices the candidate re-solve and only a
+        positive verdict reaches the solver + hot-swap."""
         if now - self._last_check < self.config.check_interval_s:
             return None
         self._last_check = now
@@ -175,6 +407,19 @@ class ReplanLoop:
             return None  # circuit breaker: something is persistently wrong
         if not self.drifted(now):
             return None
+        if self.policy is not None:
+            n0 = len(self.policy.decisions)
+            decision = self.policy.consider(
+                now, self.monitor.rates(now), self.dataplane.rt.plan,
+                self.store, source=self.config.source,
+            )
+            if len(self.policy.decisions) > n0:  # fresh, not a window repeat
+                self.dataplane.tel.replan_decisions.append(decision.as_dict())
+            if not decision.accepted:
+                # the baseline is NOT adopted: the drift stays pending so a
+                # later (possibly cleaner) window can re-price it — the
+                # policy's holdoff bounds how often that happens
+                return None
         return self.replan(now)
 
     def replan(self, now: float) -> ClusterPlan | None:
@@ -187,6 +432,7 @@ class ReplanLoop:
         serving.
         """
         rates = self.monitor.rates(now)
+        old_mix = dict(self._baseline_mix)
         profiles = dict(self.store.profiles)
         weights = {m: max(rates.get(m, 0.0), 1e-6) for m in profiles}
         # measured source: re-price the fresh runtime BEFORE any carried
@@ -205,8 +451,12 @@ class ReplanLoop:
                 # Infeasible at this workload: keep the old plan, but adopt
                 # the baseline and count the failure — otherwise the same
                 # drift re-runs the full solver every check_interval_s.
+                # Exactly one failure per event; the policy's hysteresis
+                # state is deliberately left alone (see notify_failure).
                 self.failed_replans.append((now, "infeasible: empty plan"))
                 self._consecutive_failures += 1
+                if self.policy is not None:
+                    self.policy.notify_failure(now)
                 self.set_baseline(rates)
                 return None
             self.dataplane.swap_plan(
@@ -222,10 +472,19 @@ class ReplanLoop:
             # not re-trip the same drift and re-run the solver every check.
             self.failed_replans.append((now, repr(exc)))
             self._consecutive_failures += 1
+            if self.policy is not None:
+                self.policy.notify_failure(now)
             self.set_baseline(rates)
             return None
         self._consecutive_failures = 0
         self.set_baseline(rates)
+        if self.policy is not None:
+            transients = self.dataplane.tel.swap_transient_s
+            self.policy.notify_swap(
+                now, old_mix=old_mix, new_mix=dict(self._baseline_mix),
+                solver_wall_s=self.planner.last_wall_s,
+                transient_s=transients[-1] if transients else 0.0,
+            )
         self.events.append(ReplanEvent(
             t_s=now, rates=dict(rates), weights=weights,
             throughput_rps=plan.throughput,

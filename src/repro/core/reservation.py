@@ -29,6 +29,12 @@ class Timeline:
         self.starts: list[float] = []
         self.ends: list[float] = []
 
+    @property
+    def last_end(self) -> float:
+        """End of the latest reservation (0.0 when empty): the earliest time
+        this resource is guaranteed free of *booked* work."""
+        return self.ends[-1] if self.ends else 0.0
+
     def earliest_slot(self, t: float, dur: float) -> float:
         """Earliest start >= t such that [start, start+dur) is free."""
         if dur <= 0:
@@ -123,6 +129,11 @@ class NodeRes:
     uplink: Timeline = field(default_factory=Timeline)
     downlink: Timeline = field(default_factory=Timeline)
     nic_bw: float = 0.0
+    # physical host index within the class inventory (chip_id // chips_per
+    # _host).  node_id is allocation-order and NOT stable across plan epochs;
+    # (accel_class, host_id) is — it names the physical NIC, which is what
+    # cross-epoch resource coupling keys on.
+    host_id: int = 0
 
 
 @dataclass

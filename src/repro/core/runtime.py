@@ -60,6 +60,7 @@ def build_runtime(
                 node_id=len(rt.nodes),
                 accel_class=cname,
                 nic_bw=cluster.effective_nic_bw(cname),
+                host_id=host,
             )
             nodes_by_key[key] = node
             rt.nodes.append(node)
@@ -113,11 +114,20 @@ def build_runtime(
     return rt
 
 
-def utilization_by_class(rt: ClusterRuntime, horizon_s: float) -> dict[str, float]:
-    """Temporal chip utilization per accelerator class (paper Fig. 8)."""
+def busy_by_class(rt: ClusterRuntime) -> dict[str, float]:
+    """Accumulated chip-busy seconds per accelerator class (vdev busy time
+    scaled by its chip fraction).  Horizon-independent, so a plan epoch's
+    contribution can be frozen when the epoch is garbage-collected and summed
+    with later epochs at finalize without loss."""
     busy: dict[str, float] = {c: 0.0 for c in rt.cluster.classes}
     for v in rt.vdevs:
         busy[v.accel_class] += v.busy_s / v.vfrac
+    return busy
+
+
+def utilization_by_class(rt: ClusterRuntime, horizon_s: float) -> dict[str, float]:
+    """Temporal chip utilization per accelerator class (paper Fig. 8)."""
+    busy = busy_by_class(rt)
     return {
         c: busy[c] / (rt.cluster.counts[c] * horizon_s) if rt.cluster.counts[c] else 0.0
         for c in rt.cluster.classes

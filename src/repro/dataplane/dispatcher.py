@@ -154,6 +154,19 @@ class PoolDispatcher:
             self._retire(self._inflight[0])
         return self._completed
 
+    def shutdown(self) -> None:
+        """Retire this dispatcher: block on anything still in flight and drop
+        the executor/vdev references so compiled programs and parameters can
+        be reclaimed.  Callers harvest `take_completed()` FIRST — shutdown is
+        the last call the data plane's retired-epoch GC makes on a
+        dispatcher, after its final batch completed and its measurements
+        were folded into telemetry."""
+        self.drain_all()
+        self._completed.clear()
+        self._done_by_id.clear()
+        self.executors = {}
+        self.vdev_map = {}
+
     def take_completed(self) -> list[CompletedBatch]:
         """Hand off (and forget) all completed batches.  Also the retention
         bound for the by-id lookup: once telemetry has harvested a batch, no

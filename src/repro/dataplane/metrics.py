@@ -13,7 +13,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.runtime import ClusterRuntime, utilization_by_class
+from repro.core.runtime import ClusterRuntime, busy_by_class
 from repro.core.types import RequestOutcome, attainment
 
 
@@ -49,6 +49,19 @@ class Telemetry:
     # (virtual time, reason) entry per swap for continuity assertions
     plan_swaps: int = 0
     swap_log: list = field(default_factory=list)
+    # replan governance (controlplane.ReplanPolicy): every considered re-solve
+    # as a JSON-able dict {t_s, accepted, reason, benefit_rps, cost_s, ...} —
+    # rejected candidates are as much a control action as accepted ones
+    replan_decisions: list = field(default_factory=list)
+    # virtual seconds the new epoch's pools were throttled by residual
+    # occupancy carried from older epochs, one entry per swap: the measured
+    # swap transient the replan policy prices into its cost/benefit gate
+    swap_transient_s: list = field(default_factory=list)
+    # retired-epoch GC: epochs whose runtimes/dispatchers were dropped before
+    # finalize, and the busy chip-seconds per class frozen per epoch at
+    # retire time (horizon-independent, so utilization stays exact)
+    epochs_gcd: int = 0
+    epoch_busy: dict = field(default_factory=dict)
     # measured wall seconds per (epoch, pipeline_id, stage_idx), real
     # execution only (pipeline ids restart at 0 after each plan swap)
     stage_wall_s: dict = field(default_factory=dict)
@@ -87,26 +100,50 @@ class Telemetry:
         return float(np.percentile(self.queue_delay_s, q))
 
     # -------------------------------------------------------------- finish
-    def finalize(self, runtime: ClusterRuntime, retired=()) -> None:
+    def absorb_epoch(self, epoch: int, runtime: ClusterRuntime) -> None:
+        """Freeze a retiring epoch's horizon-independent aggregates so its
+        runtime can be dropped (retired-epoch GC): busy chip-seconds per class
+        plus any drifted feedback scales.  `finalize` folds the frozen
+        contributions back in — in epoch order, so utilization comes out
+        float-identical to keeping every retired runtime until the end."""
+        self.epoch_busy[epoch] = busy_by_class(runtime)
+        self._absorb_scales(epoch, runtime)
+
+    def _absorb_scales(self, epoch: int, runtime: ClusterRuntime) -> None:
+        for p in runtime.pipelines:
+            for si, s in enumerate(p.stages):
+                if abs(s.lat_scale - 1.0) > 1e-12:
+                    self.feedback_scales[(epoch, p.pipeline_id, si)] = s.lat_scale
+
+    def finalize(self, runtime: ClusterRuntime, retired=(),
+                 current_epoch: int = 0) -> None:
         """Freeze end-of-run aggregates derived from the cluster runtime(s).
 
-        `retired` holds runtimes replaced by plan hot-swaps; their accumulated
-        busy time still counts toward utilization (same physical chips, same
-        horizon), so telemetry stays continuous across a swap.
+        `retired` maps epoch -> runtime for plan epochs replaced by hot-swaps
+        but not yet garbage-collected; `current_epoch` labels `runtime`'s
+        feedback scales.  Retired epochs' accumulated busy time — plus that
+        of epochs already absorbed at GC time — still counts toward
+        utilization (same physical chips, same horizon), so telemetry stays
+        continuous across swaps whether or not the runtimes were GC'd along
+        the way.
         """
         horizon = max(self.horizon_s, 1e-9)
-        self.utilization = utilization_by_class(runtime, horizon)
-        for rt in retired:
-            for c, u in utilization_by_class(rt, horizon).items():
-                self.utilization[c] = self.utilization.get(c, 0.0) + u
-        # retired[i] served epoch i; the current runtime is the last epoch
-        self.feedback_scales = {
-            (epoch, p.pipeline_id, si): s.lat_scale
-            for epoch, rt in enumerate((*retired, runtime))
-            for p in rt.pipelines
-            for si, s in enumerate(p.stages)
-            if abs(s.lat_scale - 1.0) > 1e-12
+        for epoch, rt in dict(retired).items():
+            self.absorb_epoch(epoch, rt)
+        # one accumulation, one division: epoch order then the live runtime,
+        # so GC'd and non-GC'd accounting sum in the same order bit-for-bit
+        total: dict[str, float] = {}
+        for epoch in sorted(self.epoch_busy):
+            for c, b in self.epoch_busy[epoch].items():
+                total[c] = total.get(c, 0.0) + b
+        for c, b in busy_by_class(runtime).items():
+            total[c] = total.get(c, 0.0) + b
+        counts = runtime.cluster.counts
+        self.utilization = {
+            c: total.get(c, 0.0) / (counts[c] * horizon) if counts.get(c) else 0.0
+            for c in runtime.cluster.classes
         }
+        self._absorb_scales(current_epoch, runtime)
 
     def snapshot(self) -> dict:
         """JSON-able summary (consumed by BENCH_e2e.json and the example)."""
@@ -139,6 +176,13 @@ class Telemetry:
             },
             "inflight_hwm": self.inflight_hwm,
             "plan_swaps": self.plan_swaps,
+            "epochs_gcd": self.epochs_gcd,
+            "swap_transient_s": list(self.swap_transient_s),
+            "replan": {
+                "considered": len(self.replan_decisions),
+                "accepted": sum(1 for d in self.replan_decisions if d["accepted"]),
+                "rejected": sum(1 for d in self.replan_decisions if not d["accepted"]),
+            },
             "utilization_by_class": dict(self.utilization),
             "stage_wall": walls,
             "feedback_scales": {f"e{e}p{p}s{s}": v

@@ -101,17 +101,36 @@ class DataPlane:
         # plan epoch: bumped by swap_plan; resource-free maps are keyed by
         # (epoch, id) because vdev/node ids restart at 0 in each new runtime
         self.epoch = 0
-        self._retired_runtimes: list[ClusterRuntime] = []
-        self._retired_dispatchers: list[tuple[int, PoolDispatcher]] = []
+        # epochs retired by swap_plan but not yet garbage-collected, keyed by
+        # epoch number.  An epoch's runtime/dispatcher live exactly until its
+        # last in-flight job completes (_maybe_gc_epoch), bounding memory to
+        # the in-flight window under arbitrarily many swaps.
+        self._retired_runtimes: dict[int, ClusterRuntime] = {}
+        self._retired_dispatchers: dict[int, PoolDispatcher] = {}
+        self._epoch_inflight: dict[int, int] = {}
         # scheduler stats accumulated from batchers retired by swap_plan, so
         # probes_per_dispatch stays continuous across plan epochs
         self._retired_probe_calls = 0
         self._retired_dispatches = 0
-        # physical residual occupancy carried across swaps, keyed by
-        # (class, chip_id) / (class, host): chips a *past* epoch still holds
-        # block later epochs even if an intermediate plan never used them
-        self._phys_chip_free: dict[tuple[str, int], float] = {}
-        self._phys_nic_free: dict[tuple[str, int], float] = {}
+        # physical resource occupancy shared across plan epochs, keyed by the
+        # *stable* physical identity — chip (class, chip_id), NIC direction
+        # (class, host_id) — mapping epoch -> latest known end of that epoch's
+        # work on the resource.  Updated live at every stage/transfer start,
+        # so an old-epoch stage whose actual start slips past its reservation
+        # still excludes later epochs exactly (ROADMAP cross-epoch coupling);
+        # entries drain at epoch GC (all ends are then in the past).
+        self._phys_chip: dict[tuple[str, int], dict[int, float]] = {}
+        self._phys_nic_ul: dict[tuple[str, int], dict[int, float]] = {}
+        self._phys_nic_dl: dict[tuple[str, int], dict[int, float]] = {}
+        # governance toggles — tests flip these to reproduce legacy behaviour
+        # (snapshot-only residual seeding / keep-until-finalize accounting)
+        self.cross_epoch_coupling = True
+        self.epoch_gc = True
+        # optional execution log: when set to a list, every stage/transfer
+        # start appends ("stage", epoch, class, chip_id, start, dur) or
+        # ("xfer", epoch, ul_key, dl_key, start, dur) — the hook the
+        # cross-epoch no-double-booking property tests audit
+        self.exec_log: list | None = None
         self.vdev_virtual_free: dict[tuple[int, int], float] = {}
         self.nic_ul_free: dict[tuple[int, int], float] = {}
         self.nic_dl_free: dict[tuple[int, int], float] = {}
@@ -172,7 +191,8 @@ class DataPlane:
         dispatches = self._retired_dispatches + self.batcher.stats.dispatches
         self.tel.probes_per_dispatch = probes / max(1, dispatches)
         self._harvest_measurements()
-        self.tel.finalize(self.rt, self._retired_runtimes)
+        self.tel.finalize(self.rt, self._retired_runtimes,
+                          current_epoch=self.epoch)
         return self.tel
 
     # --------------------------------------------------------------- arrivals
@@ -251,7 +271,11 @@ class DataPlane:
         .reprice_runtime), so the very first post-swap scheduling round probes
         at the speed the plan was solved for.  Telemetry (the `self.tel`
         object, counters, outcomes) is continuous across the swap; retired
-        runtimes still contribute utilization at finalize.
+        epochs contribute utilization exactly whether they are kept to
+        finalize or garbage-collected the moment their last in-flight job
+        completes (`_maybe_gc_epoch`).  The residual occupancy the new epoch
+        inherits is recorded per swap in `tel.swap_transient_s` — the
+        measured swap-transient cost the replan policy prices.
         """
         if self.dispatcher is not None and dispatcher_factory is None:
             # a plane executing for real (planned or measured feedback) must
@@ -277,22 +301,26 @@ class DataPlane:
                 "dispatcher"
             )
         # ---- point of no return ------------------------------------------
-        self._retired_runtimes.append(self.rt)
-        if self.dispatcher is not None:
-            self._retired_dispatchers.append((self.epoch, self.dispatcher))
+        old_rt = self.rt
+        old_epoch = self.epoch
+        self._retired_runtimes[old_epoch] = old_rt
+        if self.dispatcher is not None and new_dispatcher is not self.dispatcher:
+            # a factory may legitimately return the SAME dispatcher instance
+            # (executors are shared across epochs); never retire the object
+            # that keeps serving, or epoch GC would gut its executors mid-run
+            self._retired_dispatchers[old_epoch] = self.dispatcher
         pending = self.batcher.take_all()
         self._retired_probe_calls += self.batcher.stats.probe_calls
         self._retired_dispatches += self.batcher.stats.dispatches
-        old_rt = self._retired_runtimes[-1]
-        old_epoch = self.epoch
         self.epoch += 1
         self._install_runtime(new_rt, new_dispatcher)
-        self._seed_residual_occupancy(old_rt, old_epoch, new_rt, now)
+        transient = self._seed_residual_occupancy(old_rt, old_epoch, now)
         # stale WaitUntil coalescing state refers to the old queues; scheduled
         # WAKE events still fire but harmlessly re-run the new scheduler
         self._wakes.clear()
         self.tel.plan_swaps += 1
         self.tel.swap_log.append((now, reason))
+        self.tel.swap_transient_s.append(transient)
         models: list[str] = []
         for req in pending:
             # _admit rejects requests for models the new plan dropped (even
@@ -303,67 +331,139 @@ class DataPlane:
                 models.append(req.model_name)
         for m in models:
             self._run_scheduler(m, now)
+        # an old epoch with nothing in flight retires on the spot
+        self._maybe_gc_epoch(old_epoch)
         return new_rt
 
+    # ---------------------------------------------- cross-epoch resources
+    @staticmethod
+    def _phys_wait(phys: dict, key: tuple[str, int], epoch: int) -> float:
+        """Latest end any *other* epoch holds on physical resource `key`.
+
+        Epochs of one resource never overlap (different plan epochs load
+        different pools/weights, so a chip serves exactly one at a time);
+        within an epoch, co-resident vdevs (vfrac > 1) stay concurrent —
+        that sharing is priced into the partition latency, not serialized
+        here.  Symmetric on purpose: a *retired* epoch's slipping stage also
+        waits for work the new epoch already started on the chip."""
+        by_epoch = phys.get(key)
+        if not by_epoch:
+            return 0.0
+        return max((end for e, end in by_epoch.items() if e != epoch),
+                   default=0.0)
+
+    @staticmethod
+    def _phys_note(phys: dict, key: tuple[str, int], epoch: int,
+                   end: float) -> None:
+        by_epoch = phys.setdefault(key, {})
+        if end > by_epoch.get(epoch, 0.0):
+            by_epoch[epoch] = end
+
     def _seed_residual_occupancy(self, old_rt: ClusterRuntime, old_epoch: int,
-                                 new_rt: ClusterRuntime, now: float) -> None:
-        """Carry the old epoch's in-flight chip occupancy into the new epoch.
+                                 now: float) -> float:
+        """Fold the retiring epoch's booked occupancy into the shared
+        physical free maps, then seed the new epoch's timelines from them.
 
         Drain-and-swap does not duplicate hardware: batches dispatched under
-        the old plan keep their physical chips busy until they drain, so the
-        new plan's pools on those chips must not probe as free at `now`.
-        Chips are identified by (class, chip_id) and hosts/NICs by
-        (class, chip_id // chips_per_host) — `build_runtime` allocates both
-        epochs' chips per class in the same order over the same inventory.
-        The residual is each resource's last booked end (reservation
-        timelines cover in-flight work; the free maps cover started
-        stages/transfers); it is reserved on the new resource's timeline so
-        both probe() and the free-map path wait it out.
-
-        Residuals persist across consecutive swaps (`_phys_chip_free` /
-        `_phys_nic_free`): a chip busy under epoch N but unused by epoch N+1
-        still blocks epoch N+2 until it drains.  Known approximation: each
-        epoch's contribution is a snapshot at its swap.  An old-epoch stage
-        whose *actual* start later slips past its reservation (free-map
-        contention, measured-feedback inflation) can outrun the seed by up to
-        one stage duration; full cross-epoch coupling of physical resources
-        is a ROADMAP follow-up.
-        """
-        cph = max(old_rt.cluster.chips_per_host, 1)
-        chip_free = self._phys_chip_free
-        nic_free = self._phys_nic_free
-        # drop residuals that have already drained
-        for d in (chip_free, nic_free):
-            for k in [k for k, t in d.items() if t <= now]:
-                del d[k]
+        the old plan keep their physical chips/NICs busy until they drain, so
+        the new plan's pools on those resources must not probe as free at
+        `now`.  Chips are identified by (class, chip_id) and NIC directions
+        by (class, host_id) — `build_runtime` allocates every epoch's chips
+        per class in the same order over the same inventory.  The fold
+        records each old resource's last *booked* end (reservation timelines
+        cover dispatched-but-unfinished work; the epoch free maps cover
+        started stages/transfers) as that epoch's entry in the shared map;
+        `_start_stage`/`_on_stage_done` keep refining the entries with actual
+        execution ends, so a stage that slips past its booking after the
+        swap still excludes other epochs exactly (no snapshot staleness).
+        The seed is reserved on the new resources' timelines so probe() and
+        the free-map path both wait it out; entries of an epoch vanish when
+        its last job completes (_maybe_gc_epoch) — by then they are all in
+        the past.  Returns the swap transient: the longest residual (virtual
+        seconds past `now`) any new-epoch resource inherited."""
+        # drop sub-entries that already drained (cheap O(resources) tidy-up)
+        for phys in (self._phys_chip, self._phys_nic_ul, self._phys_nic_dl):
+            for key in list(phys):
+                by_epoch = phys[key]
+                for e in [e for e, end in by_epoch.items() if end <= now]:
+                    del by_epoch[e]
+                if not by_epoch:
+                    del phys[key]
         for v in old_rt.vdevs:
-            end = v.timeline.ends[-1] if v.timeline.ends else 0.0
-            end = max(end, self.vdev_virtual_free.get((old_epoch, v.vdev_id), 0.0))
-            key = (v.accel_class, v.chip_id)
-            chip_free[key] = max(chip_free.get(key, 0.0), end)
-            host = (v.accel_class, v.chip_id // cph)
-            n = v.node
-            nend = max(
-                n.uplink.ends[-1] if n.uplink.ends else 0.0,
-                n.downlink.ends[-1] if n.downlink.ends else 0.0,
-                self.nic_ul_free.get((old_epoch, n.node_id), 0.0),
-                self.nic_dl_free.get((old_epoch, n.node_id), 0.0),
-            )
-            nic_free[host] = max(nic_free.get(host, 0.0), nend)
-        for v in new_rt.vdevs:
-            free = chip_free.get((v.accel_class, v.chip_id), 0.0)
+            end = max(v.timeline.last_end,
+                      self.vdev_virtual_free.get((old_epoch, v.vdev_id), 0.0))
+            if end > now:
+                self._phys_note(self._phys_chip, (v.accel_class, v.chip_id),
+                                old_epoch, end)
+        for n in old_rt.nodes:
+            key = (n.accel_class, n.host_id)
+            ul = max(n.uplink.last_end,
+                     self.nic_ul_free.get((old_epoch, n.node_id), 0.0))
+            if ul > now:
+                self._phys_note(self._phys_nic_ul, key, old_epoch, ul)
+            dl = max(n.downlink.last_end,
+                     self.nic_dl_free.get((old_epoch, n.node_id), 0.0))
+            if dl > now:
+                self._phys_note(self._phys_nic_dl, key, old_epoch, dl)
+        transient = 0.0
+        for v in self.rt.vdevs:
+            free = self._phys_wait(self._phys_chip,
+                                   (v.accel_class, v.chip_id), self.epoch)
             if free > now:
                 self.vdev_virtual_free[(self.epoch, v.vdev_id)] = free
                 v.timeline.reserve(now, free - now)
-            nfree = nic_free.get((v.accel_class, v.chip_id // cph), 0.0)
-            if nfree > now:
-                n = v.node
-                key = (self.epoch, n.node_id)
-                if self.nic_ul_free.get(key, 0.0) < nfree:
-                    self.nic_ul_free[key] = nfree
-                    self.nic_dl_free[key] = nfree
-                    n.uplink.reserve(now, nfree - now)
-                    n.downlink.reserve(now, nfree - now)
+                transient = max(transient, free - now)
+        for n in self.rt.nodes:
+            key = (n.accel_class, n.host_id)
+            ul = self._phys_wait(self._phys_nic_ul, key, self.epoch)
+            if ul > now:
+                self.nic_ul_free[(self.epoch, n.node_id)] = ul
+                n.uplink.reserve(now, ul - now)
+                transient = max(transient, ul - now)
+            dl = self._phys_wait(self._phys_nic_dl, key, self.epoch)
+            if dl > now:
+                self.nic_dl_free[(self.epoch, n.node_id)] = dl
+                n.downlink.reserve(now, dl - now)
+                transient = max(transient, dl - now)
+        return transient
+
+    # ------------------------------------------------------------ epoch GC
+    def _maybe_gc_epoch(self, epoch: int) -> None:
+        """Drop a retired epoch the moment its last in-flight job completes.
+
+        Telemetry keeps exact per-epoch aggregates (`Telemetry.absorb_epoch`
+        freezes busy chip-seconds + feedback scales; the dispatcher's wall
+        measurements are harvested first), so finalize-time utilization is
+        float-identical to the keep-everything accounting — while runtimes,
+        timelines, dispatchers and (epoch, id) free-map entries of long
+        traces with many swaps stay bounded by the in-flight window."""
+        if not self.epoch_gc or epoch == self.epoch:
+            return
+        rt = self._retired_runtimes.get(epoch)
+        if rt is None or self._epoch_inflight.get(epoch, 0) > 0:
+            return
+        del self._retired_runtimes[epoch]
+        self._epoch_inflight.pop(epoch, None)
+        disp = self._retired_dispatchers.pop(epoch, None)
+        if disp is not None and disp is not self.dispatcher:
+            # belt-and-braces: swap_plan never retires the live dispatcher,
+            # but shutting down a still-serving object would silently drop
+            # every subsequent batch, so guard here too
+            self._harvest_dispatcher(epoch, disp)
+            disp.shutdown()
+        self.tel.absorb_epoch(epoch, rt)
+        self.tel.epochs_gcd += 1
+        for free in (self.vdev_virtual_free, self.nic_ul_free,
+                     self.nic_dl_free):
+            for k in [k for k in free if k[0] == epoch]:
+                del free[k]
+        # the epoch's physical occupancy is fully in the past (its last job
+        # just completed), so its shared-map entries cannot constrain anyone
+        for phys in (self._phys_chip, self._phys_nic_ul, self._phys_nic_dl):
+            for key in list(phys):
+                phys[key].pop(epoch, None)
+                if not phys[key]:
+                    del phys[key]
 
     def _dispatch(self, now: float, action: Dispatch) -> None:
         pr = action.probe_result
@@ -402,6 +502,8 @@ class DataPlane:
             clock=now,
         )
         self.jobs[job.job_id] = job
+        self._epoch_inflight[self.epoch] = (
+            self._epoch_inflight.get(self.epoch, 0) + 1)
         self._start_stage(now, job)
 
     # -------------------------------------------------------------- execution
@@ -421,10 +523,22 @@ class DataPlane:
         planned_dur = job.probe.stage_durs[k]
         start = max(planned_start, job.clock,
                     self.vdev_virtual_free[(job.epoch, gpu.vdev_id)])
+        chip = (gpu.accel_class, gpu.chip_id)
+        if self.cross_epoch_coupling:
+            # exact cross-epoch exclusion: the physical chip may still be
+            # running (or already booked by) another plan epoch — including
+            # slip past that epoch's reservations, which the swap-time seed
+            # alone cannot see
+            start = max(start, self._phys_wait(self._phys_chip, chip,
+                                               job.epoch))
         dur = self._stage_dur(job, k)
         self.vdev_virtual_free[(job.epoch, gpu.vdev_id)] = start + dur
+        self._phys_note(self._phys_chip, chip, job.epoch, start + dur)
         gpu.busy_s += dur
         gpu.timeline.correct(planned_start, planned_dur, start, dur)
+        if self.exec_log is not None:
+            self.exec_log.append(
+                ("stage", job.epoch, gpu.accel_class, gpu.chip_id, start, dur))
         self.push(start + dur, self.STAGE_DONE, (job.job_id, start, dur))
 
     def _on_stage_done(self, t: float, payload: tuple) -> None:
@@ -447,16 +561,27 @@ class DataPlane:
         dur = nbytes / bw
         planned_start = job.probe.xfer_starts[k - 1]
         planned_dur = job.probe.xfer_durs[k - 1]
+        ul_key = (src.node.accel_class, src.node.host_id)
+        dl_key = (dst.node.accel_class, dst.node.host_id)
         start = max(
             planned_start,
             t,
             self.nic_ul_free[(job.epoch, src.node.node_id)],
             self.nic_dl_free[(job.epoch, dst.node.node_id)],
         )
+        if self.cross_epoch_coupling:
+            start = max(start,
+                        self._phys_wait(self._phys_nic_ul, ul_key, job.epoch),
+                        self._phys_wait(self._phys_nic_dl, dl_key, job.epoch))
         src.node.uplink.correct(planned_start, planned_dur, start, dur)
         dst.node.downlink.correct(planned_start, planned_dur, start, dur)
         self.nic_ul_free[(job.epoch, src.node.node_id)] = start + dur
         self.nic_dl_free[(job.epoch, dst.node.node_id)] = start + dur
+        self._phys_note(self._phys_nic_ul, ul_key, job.epoch, start + dur)
+        self._phys_note(self._phys_nic_dl, dl_key, job.epoch, start + dur)
+        if self.exec_log is not None:
+            self.exec_log.append(
+                ("xfer", job.epoch, ul_key, dl_key, start, dur))
         self.push(start + dur, self.XFER_DONE, job_id)
 
     def _on_xfer_done(self, t: float, job_id: int) -> None:
@@ -474,6 +599,9 @@ class DataPlane:
                 pipeline_id=job.pipeline_id,
             ))
         del self.jobs[job.job_id]
+        self._epoch_inflight[job.epoch] = (
+            self._epoch_inflight.get(job.epoch, 1) - 1)
+        self._maybe_gc_epoch(job.epoch)
 
     def _drop(self, req: Request) -> None:
         self.tel.outcomes.append(RequestOutcome(
@@ -484,20 +612,26 @@ class DataPlane:
         ))
 
     # -------------------------------------------------------------- wall side
+    def _harvest_dispatcher(self, epoch: int, disp: PoolDispatcher) -> None:
+        disp.drain_all()
+        for c in disp.take_completed():
+            self.tel.batch_wall_s.append(c.total_wall_s)
+            for si, w in enumerate(c.stage_wall_s):
+                # keyed by epoch too: pipeline ids restart at 0 after a
+                # swap, and stage walls of unrelated partitions must not
+                # blend into one percentile bucket
+                self.tel.stage_wall_s.setdefault(
+                    (epoch, c.pipeline_id, si), []).append(w)
+        self.tel.inflight_hwm = max(self.tel.inflight_hwm, disp.inflight_hwm)
+
     def _harvest_measurements(self) -> None:
-        for epoch, disp in (*self._retired_dispatchers, (self.epoch, self.dispatcher)):
+        # dispatchers of GC'd epochs were harvested at retire time; this
+        # covers surviving retired epochs (epoch_gc off) + the live one
+        for epoch, disp in (*self._retired_dispatchers.items(),
+                            (self.epoch, self.dispatcher)):
             if disp is None:
                 continue
-            disp.drain_all()
-            for c in disp.take_completed():
-                self.tel.batch_wall_s.append(c.total_wall_s)
-                for si, w in enumerate(c.stage_wall_s):
-                    # keyed by epoch too: pipeline ids restart at 0 after a
-                    # swap, and stage walls of unrelated partitions must not
-                    # blend into one percentile bucket
-                    self.tel.stage_wall_s.setdefault(
-                        (epoch, c.pipeline_id, si), []).append(w)
-            self.tel.inflight_hwm = max(self.tel.inflight_hwm, disp.inflight_hwm)
+            self._harvest_dispatcher(epoch, disp)
 
 
 def serve_trace(

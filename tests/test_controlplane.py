@@ -8,9 +8,11 @@ import pytest
 from repro.controlplane import (
     Objective,
     Planner,
+    PolicyConfig,
     ProfileStore,
     ReplanConfig,
     ReplanLoop,
+    ReplanPolicy,
     plan_cluster,
 )
 from repro.core import blocks, costmodel as cm
@@ -315,6 +317,83 @@ def test_swap_plan_is_atomic_when_dispatcher_factory_raises():
     assert state, "hook never fired"
     assert dp.epoch == 0 and tel.plan_swaps == 0
     assert len(tel.outcomes) == len(trace)
+
+
+class _FlakyPlanner(Planner):
+    """A Planner whose solve can be switched to raise — the control loop must
+    absorb it without taking serving down."""
+
+    fail = False
+
+    def plan(self, *args, **kwargs):
+        if self.fail:
+            raise RuntimeError("solver down")
+        return super().plan(*args, **kwargs)
+
+
+def test_failed_replan_keeps_cooldown_and_counts_failure_once():
+    """Regression (replan governance): a failed/infeasible re-solve must
+    neither reset the policy's cooldown window nor trip the max_failures
+    circuit breaker more than once for one drift event — and a drift trip
+    rejected by the cooldown must never reach the solver at all."""
+    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    store = _store(profs)
+    planner = _FlakyPlanner(objective=Objective(slo_margin=0.4, max_partitions=2))
+    plan0 = planner.plan(
+        profs, store.tables(), CLUSTER,
+        objective=planner.objective.with_weights({"m0": 0.9, "m1": 0.1}),
+    )
+    dp = DataPlane(build_runtime(plan0, profs))
+    policy = ReplanPolicy(PolicyConfig(cooldown_s=1.0))
+    loop = ReplanLoop(
+        planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
+        config=ReplanConfig(window_s=1.0, check_interval_s=0.1,
+                            min_requests=4, mix_drift=0.3),
+        policy=policy,
+    )
+    rate = plan0.throughput  # observation rate at full planned capacity
+    loop.set_baseline({"m0": rate * 0.9, "m1": rate * 0.1})
+
+    def burst(models, t0, t1):
+        n = max(8, int(rate * (t1 - t0)))
+        for i in range(n):
+            loop.monitor.observe(models[i % len(models)],
+                                 t0 + (t1 - t0) * i / n)
+
+    # an m1-only window at full capacity trips drift; the current plan is
+    # m0-heavy so the gate sees a clear gain and the swap succeeds
+    burst(["m1"], 0.2, 1.0)
+    assert loop.maybe_replan(1.0) is not None
+    assert dp.epoch == 1 and policy.cooldown_until == pytest.approx(2.0)
+
+    # drift again (back to m0-heavy, a steady stream from here on) INSIDE
+    # the cooldown with a broken solver: the gate rejects before the solver
+    # runs -> no failure recorded
+    planner.fail = True
+    burst(["m0"], 1.05, 1.5)
+    assert loop.maybe_replan(1.5) is None
+    assert loop.failed_replans == [] and loop._consecutive_failures == 0
+    assert policy.decisions[-1].reason == "cooldown"
+
+    # past the cooldown the same drift reaches the (still broken) solver:
+    # exactly one failure for the event, cooldown state untouched
+    burst(["m0"], 1.5, 2.5)
+    assert loop.maybe_replan(2.5) is None
+    assert len(loop.failed_replans) == 1
+    assert loop._consecutive_failures == 1 and policy.failures == 1
+    assert policy.cooldown_until == pytest.approx(2.0)  # not reset by failure
+
+    # the failure adopted the observed baseline, so the SAME steady drift
+    # event cannot re-trip the breaker on the next check
+    burst(["m0"], 2.5, 3.0)
+    assert loop.maybe_replan(3.0) is None
+    assert len(loop.failed_replans) == 1 and loop._consecutive_failures == 1
+
+    # once the solver heals, a genuinely new drift re-plans again
+    planner.fail = False
+    burst(["m0", "m1"], 3.0, 4.0)  # 50/50: drifted AND underserved
+    assert loop.maybe_replan(4.0) is not None
+    assert loop._consecutive_failures == 0 and dp.epoch == 2
 
 
 def test_replan_loop_triggers_on_mix_drift_and_improves_fit():

@@ -1,0 +1,259 @@
+"""Epoch lifecycle under plan hot-swaps: retired-epoch GC (bounded memory,
+float-identical telemetry) and cross-epoch physical resource coupling (no
+chip/NIC double-booking even when an old stage slips past its reservation)."""
+
+import numpy as np
+from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+
+from repro.controlplane import Objective, Planner, ProfileStore
+from repro.core import blocks, costmodel as cm
+from repro.core.runtime import build_runtime
+from repro.core.types import ClusterSpec
+from repro.data.requests import multi_model_trace
+from repro.dataplane import DataPlane
+
+CLUSTER = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 4})
+
+
+def _profile(n_layers=8, n_blocks=4, slo=0.03, seed=0, seq=256, name="m"):
+    rng = np.random.default_rng(seed)
+    layers = [cm.embed_cost(seq, 1024, 32000)]
+    for i in range(n_layers):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(seq, 1024, 16, 4),
+            cm.mlp_cost(seq, 1024, int(rng.uniform(2048, 8192))),
+        ]))
+    layers.append(cm.head_cost(seq, 1024, 32000))
+    return blocks.build_profile(name, layers, slo, n_blocks=n_blocks)
+
+
+def _setup():
+    """Two models, two alternating plans (m0-heavy / m1-heavy) on one cluster."""
+    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    store = ProfileStore(CLUSTER, vfracs=(1, 2), batch_sizes=(1, 2))
+    for p in profs.values():
+        store.add(p, cm.build_latency_table(p, CLUSTER, vfracs=(1, 2),
+                                            batch_sizes=(1, 2)))
+    planner = Planner(objective=Objective(slo_margin=0.4, max_partitions=2))
+    plan_a = planner.plan(profs, store.tables(), CLUSTER,
+                          objective=planner.objective.with_weights(
+                              {"m0": 0.9, "m1": 0.1}))
+    plan_b = planner.plan(profs, store.tables(), CLUSTER,
+                          objective=planner.objective.with_weights(
+                              {"m0": 0.1, "m1": 0.9}))
+    return profs, plan_a, plan_b
+
+
+def _trace(profs, plan, horizon_s, load=0.7, seed=0):
+    rates = {m: max(plan.throughput_of(m), 1.0) * load for m in profs}
+    slos = {m: p.slo_s for m, p in profs.items()}
+    return multi_model_trace(rates, horizon_s, slos, seed=seed)
+
+
+def _swap_script(dp, profs, plan_a, plan_b, swap_times, state):
+    """Arrival hook flipping between plan_a/plan_b at fixed virtual times —
+    deterministic across runs, so GC'd and non-GC'd planes see identical
+    swap sequences."""
+    def hook(req, t):
+        i = state.setdefault("i", 0)
+        if i < len(swap_times) and t >= swap_times[i]:
+            state["i"] = i + 1
+            nxt = plan_b if i % 2 == 0 else plan_a
+            dp.swap_plan(nxt, profs, now=t, reason=f"script#{i}")
+            state.setdefault("retired_hwm", 0)
+            state["retired_hwm"] = max(state["retired_hwm"],
+                                       len(dp._retired_runtimes))
+            state.setdefault("inflight_at_swap", []).append(len(dp.jobs))
+    return hook
+
+
+# ---------------------------------------------------------------------------
+# Retired-epoch GC: bounded memory, exact telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_many_swaps_gc_bounds_retired_structures():
+    profs, plan_a, plan_b = _setup()
+    horizon = 10.0
+    trace = _trace(profs, plan_a, horizon, seed=3)
+    swap_times = [round(0.2 + 0.19 * k, 3) for k in range(50)]
+    dp = DataPlane(build_runtime(plan_a, profs))
+    state = {}
+    dp.arrival_hooks.append(_swap_script(dp, profs, plan_a, plan_b,
+                                         swap_times, state))
+    tel = dp.serve(trace)
+
+    assert tel.plan_swaps >= 40, "long trace must actually exercise many swaps"
+    # every retired epoch was dropped the moment its last job completed...
+    assert dp._retired_runtimes == {}
+    assert dp._retired_dispatchers == {}
+    assert tel.epochs_gcd == tel.plan_swaps
+    # ...and at no point did retired runtimes pile up past the in-flight
+    # window (the pre-GC behaviour kept every one of the ~50)
+    assert state["retired_hwm"] <= 3
+    # epoch-keyed free maps only hold live epochs
+    for free in (dp.vdev_virtual_free, dp.nic_ul_free, dp.nic_dl_free):
+        assert {k[0] for k in free} <= {dp.epoch}
+    for phys in (dp._phys_chip, dp._phys_nic_ul, dp._phys_nic_dl):
+        for by_epoch in phys.values():
+            assert set(by_epoch) <= {dp.epoch}
+    # continuity survives GC: one outcome per request, nothing lost
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+
+
+def _serve_scripted(profs, plan_a, plan_b, trace, swap_times, *, gc):
+    dp = DataPlane(build_runtime(plan_a, profs))
+    dp.epoch_gc = gc
+    # a drifted feedback scale makes the per-epoch scale accounting visible
+    dp.rt.pipelines[0].stages[0].lat_scale = 1.25
+    state = {}
+    dp.arrival_hooks.append(_swap_script(dp, profs, plan_a, plan_b,
+                                         swap_times, state))
+    tel = dp.serve(trace)
+    return dp, tel
+
+
+def test_gc_telemetry_float_identical_to_no_gc_accounting():
+    profs, plan_a, plan_b = _setup()
+    trace = _trace(profs, plan_a, 6.0, seed=11)
+    swap_times = [0.6, 1.7, 2.9, 4.1]
+    dp_gc, tel_gc = _serve_scripted(profs, plan_a, plan_b, trace, swap_times,
+                                    gc=True)
+    dp_no, tel_no = _serve_scripted(profs, plan_a, plan_b, trace, swap_times,
+                                    gc=False)
+
+    # the no-GC plane kept every retired runtime; the GC plane kept none
+    assert dp_no._retired_runtimes and not dp_gc._retired_runtimes
+    assert tel_no.epochs_gcd == 0 and tel_gc.epochs_gcd == tel_gc.plan_swaps
+    # identical serving behaviour...
+    assert len(tel_gc.outcomes) == len(tel_no.outcomes) == len(trace)
+    assert tel_gc.attainment == tel_no.attainment
+    # ...and float-identical finalize aggregates: utilization accumulated
+    # per epoch at retire time equals keeping the runtimes to the end
+    assert tel_gc.utilization == tel_no.utilization
+    assert tel_gc.feedback_scales == tel_no.feedback_scales
+    assert tel_gc.probes_per_dispatch == tel_no.probes_per_dispatch
+    assert tel_gc.swap_transient_s == tel_no.swap_transient_s
+
+
+def test_swap_with_nothing_in_flight_retires_epoch_immediately():
+    profs, plan_a, plan_b = _setup()
+    dp = DataPlane(build_runtime(plan_a, profs))
+    dp.swap_plan(plan_b, profs, now=0.0, reason="idle-swap")
+    # no in-flight jobs under epoch 0 -> GC'd inside swap_plan itself
+    assert dp.epoch == 1
+    assert dp._retired_runtimes == {} and dp.tel.epochs_gcd == 1
+    # the plane still serves normally on the new plan afterwards
+    trace = _trace(profs, plan_b, 1.0, seed=2)
+    tel = dp.serve(trace)
+    assert len(tel.outcomes) == len(trace)
+    assert tel.utilization and sum(tel.utilization.values()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cross-epoch coupling: no physical double-booking, ever
+# ---------------------------------------------------------------------------
+
+
+class SlippingPlane(DataPlane):
+    """Inflates retired-epoch stage durations by `slip` — the virtual-mode
+    analogue of measured-feedback slip: an old in-flight batch runs longer
+    than its reservation said, exactly the overlap hazard of ROADMAP's
+    snapshot-seeding approximation."""
+
+    slip = 2.5
+
+    def _stage_dur(self, job, k):
+        dur = super()._stage_dur(job, k)
+        if job.epoch != self.epoch:
+            dur *= self.slip
+        return dur
+
+
+def _cross_epoch_overlaps(exec_log, eps=1e-9):
+    """(key, a, b) for every pair of *different-epoch* intervals that overlap
+    on one physical resource.  Same-epoch overlap is legitimate (vfrac
+    sharing is priced into the latency model) and ignored."""
+    chips: dict = {}
+    nics_ul: dict = {}
+    nics_dl: dict = {}
+    for rec in exec_log:
+        if rec[0] == "stage":
+            _, epoch, cls, chip, start, dur = rec
+            chips.setdefault((cls, chip), []).append((epoch, start, start + dur))
+        else:
+            _, epoch, ul_key, dl_key, start, dur = rec
+            nics_ul.setdefault(ul_key, []).append((epoch, start, start + dur))
+            nics_dl.setdefault(dl_key, []).append((epoch, start, start + dur))
+    bad = []
+    for kind, groups in (("chip", chips), ("ul", nics_ul), ("dl", nics_dl)):
+        for key, ivs in groups.items():
+            ivs.sort(key=lambda x: (x[1], x[2]))
+            last_end_by_epoch: dict = {}
+            for epoch, start, end in ivs:
+                for e, last in last_end_by_epoch.items():
+                    if e != epoch and last - start > eps:
+                        bad.append(((kind, key), (e, last), (epoch, start, end)))
+                last_end_by_epoch[epoch] = max(
+                    last_end_by_epoch.get(epoch, 0.0), end)
+    return bad
+
+
+def _run_slipping(profs, plan_a, plan_b, trace, swap_times, *, coupled, slip=2.5):
+    dp = SlippingPlane(build_runtime(plan_a, profs))
+    dp.slip = slip
+    dp.cross_epoch_coupling = coupled
+    dp.exec_log = []
+    state = {}
+    dp.arrival_hooks.append(_swap_script(dp, profs, plan_a, plan_b,
+                                         swap_times, state))
+    tel = dp.serve(trace)
+    return dp, tel, state
+
+
+def test_snapshot_seeding_bug_reproduces_then_coupling_fixes_it():
+    """The exact ROADMAP item 5 scenario: an old-epoch stage whose actual
+    start/duration slips past its reservation after the swap overlaps the
+    new epoch's bookings under the legacy snapshot-only seeding — and cannot
+    under shared physical free maps."""
+    profs, plan_a, plan_b = _setup()
+    trace = _trace(profs, plan_a, 4.0, load=0.85, seed=9)
+    swap_times = [0.5, 1.5, 2.5]
+
+    dp_old, _, state_old = _run_slipping(profs, plan_a, plan_b, trace,
+                                         swap_times, coupled=False)
+    assert any(n > 0 for n in state_old["inflight_at_swap"]), \
+        "scenario must swap with work in flight"
+    assert _cross_epoch_overlaps(dp_old.exec_log), \
+        "legacy snapshot seeding should double-book under stage slip"
+
+    dp_new, tel, _ = _run_slipping(profs, plan_a, plan_b, trace,
+                                   swap_times, coupled=True)
+    assert _cross_epoch_overlaps(dp_new.exec_log) == []
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    slip=st.floats(min_value=1.0, max_value=4.0),
+    swap_offsets=st.lists(st.floats(min_value=0.3, max_value=3.5),
+                          min_size=1, max_size=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_no_chip_or_nic_double_booking(slip, swap_offsets, seed):
+    """Under random swap timings and stage-slip injections, no physical chip
+    or NIC interval of one epoch ever overlaps another epoch's."""
+    profs, plan_a, plan_b = _setup()
+    trace = _trace(profs, plan_a, 4.0, load=0.8, seed=seed)
+    swap_times = sorted(set(round(t, 3) for t in swap_offsets))
+    dp, tel, _ = _run_slipping(profs, plan_a, plan_b, trace, swap_times,
+                               coupled=True, slip=slip)
+    assert _cross_epoch_overlaps(dp.exec_log) == []
+    # continuity: every request has exactly one outcome despite the slips
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+    # and the GC invariant holds under the same randomness
+    assert dp._retired_runtimes == {}
+    assert tel.epochs_gcd == tel.plan_swaps
