@@ -16,8 +16,13 @@ queue delay) so later PRs can track the perf trajectory.
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/bench_e2e_load.py`
+    sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
 
 from repro.controlplane import (
     Objective,
@@ -34,7 +39,16 @@ from repro.core.types import replace
 from repro.data.requests import describe, multi_model_trace
 from repro.dataplane import DataPlane, serve_trace
 
-from .common import GROUPS, HC_LARGE, HC_SMALL, make_setup, max_load_factor
+if __package__ in (None, ""):
+    from benchmarks.common import (
+        GROUPS,
+        HC_LARGE,
+        HC_SMALL,
+        make_setup,
+        max_load_factor,
+    )
+else:
+    from .common import GROUPS, HC_LARGE, HC_SMALL, make_setup, max_load_factor
 
 HORIZON_S = 8.0
 
@@ -130,7 +144,15 @@ def _tel_detail(tel):
     }
 
 
-def run_drift(cluster_name="HC1-S", quick=False, seed=0):
+def _mix_pair(archs, weights):
+    """Dominance mix and its flip: weights[i] for archs[i], reversed after
+    the shift — generalizes the 2-model A/B flip to any model count."""
+    mix_a = dict(zip(archs, weights))
+    mix_b = dict(zip(archs, reversed(weights)))
+    return mix_a, mix_b
+
+
+def run_drift(cluster_name="HC1-S", quick=False, seed=0, n_models=2):
     """Static plan vs. online re-planning under a mid-trace mix shift.
 
     The plan is solved for an A-dominant mix; halfway through the trace the
@@ -143,17 +165,21 @@ def run_drift(cluster_name="HC1-S", quick=False, seed=0):
     speed (`source="measured"` + reprice_runtime) — on an uncalibrated
     runtime the two are float-identical, so the recorded attainment delta
     doubles as live parity evidence for the measured path.
+
+    `cluster_name`/`n_models` scale the scenario: the default is the CI-fast
+    HC1-S 2-model setup, `--full` additionally runs HC1-L with 3 models —
+    the paper's 100-device scale (ROADMAP item: affordable now that the
+    scheduler hot path is several times faster).
     """
-    cluster = HC_SMALL[cluster_name]
-    archs = GROUPS["G1"][:2]
-    a, b = archs
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS["G1"][:n_models]
     profiles, tables = make_setup(archs, cluster)
     store = ProfileStore(cluster)
     for name in archs:
         store.add(profiles[name], tables[name])
     planner = Planner(objective=Objective(slo_margin=0.4))
-    mix_a = {a: 0.85, b: 0.15}
-    mix_b = {a: 0.15, b: 0.85}
+    mix_a, mix_b = _mix_pair(
+        archs, [0.85, 0.15] if n_models == 2 else [0.7, 0.2, 0.1])
     plan0 = planner.plan(profiles, tables, cluster,
                          objective=planner.objective.with_weights(mix_a))
     rate = plan0.throughput * 0.8
@@ -218,7 +244,7 @@ def run_drift(cluster_name="HC1-S", quick=False, seed=0):
     }
 
 
-def run_oscillation(cluster_name="HC1-S", quick=False, seed=0):
+def run_oscillation(cluster_name="HC1-S", quick=False, seed=0, n_models=2):
     """Replan governance under an adversarial oscillating mix (A->B->A->...).
 
     The ungated `ReplanLoop` re-solves on every drift trip — the
@@ -226,17 +252,19 @@ def run_oscillation(cluster_name="HC1-S", quick=False, seed=0):
     churn.  The gated loop carries a `ReplanPolicy` (cost/benefit gate +
     cooldown + oscillation damper): it should cut plan swaps by >= 3x while
     staying within ~2% attainment of the upper bound.
+
+    Like run_drift, scales to the paper's 100-device HC1-L 3-model setup
+    under `--full`.
     """
-    cluster = HC_SMALL[cluster_name]
-    archs = GROUPS["G1"][:2]
-    a, b = archs
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS["G1"][:n_models]
     profiles, tables = make_setup(archs, cluster)
     store = ProfileStore(cluster)
     for name in archs:
         store.add(profiles[name], tables[name])
     planner = Planner(objective=Objective(slo_margin=0.4))
-    mix_a = {a: 0.65, b: 0.35}
-    mix_b = {a: 0.35, b: 0.65}
+    mix_a, mix_b = _mix_pair(
+        archs, [0.65, 0.35] if n_models == 2 else [0.5, 0.3, 0.2])
     plan0 = planner.plan(profiles, tables, cluster,
                          objective=planner.objective.with_weights(mix_a))
     rate = plan0.throughput * 0.65
@@ -296,7 +324,124 @@ def run_oscillation(cluster_name="HC1-S", quick=False, seed=0):
     }
 
 
-def main(quick=False):
+def run_swap_measured(quick=False):
+    """Measured-mode live plan swap on the REAL execution path (ROADMAP
+    item 1 leftover): a calibrated 2-stage pooled pipeline serves under
+    ``feedback="measured"``; mid-trace, `swap_plan` installs a fresh runtime
+    through a dispatcher_factory reusing the compiled executors, with a
+    `runtime_setup` hook that re-calibrates the new runtime's latency tables
+    from real execution BEFORE any carried request is re-admitted.  Records
+    the swap wall (solver-free: pure drain/rebuild/recalibrate cost) and the
+    measured virtual transient the new epoch inherits — the two quantities
+    `ReplanPolicy` prices when gating a re-solve.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import blocks, costmodel as cm
+    from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
+    from repro.core.types import ClusterSpec
+    from repro.data.requests import poisson_trace
+    from repro.dataplane import (
+        PoolDispatcher,
+        build_executors,
+        calibrate_runtime,
+    )
+    from repro.models.model_zoo import layer_costs
+    from repro.serving.engine import layer_block_map_from_profile
+
+    seq = 32
+    cfg = get_config("stablelm-3b").reduced(n_layers=8, d_model=256, d_ff=512,
+                                            n_heads=4, kv_heads=4, vocab=2048)
+    cluster = ClusterSpec(counts={"tpu-hi": 1, "tpu-lo": 8})
+    costs = layer_costs(cfg, seq)
+    prof0 = blocks.build_profile(cfg.name, costs, slo_s=1.0, n_blocks=6,
+                                 accel=cluster.accel("tpu-hi"))
+    base = sum(cm.block_latency(b, cluster.accel("tpu-hi"), 1, 1)
+               for b in prof0.blocks)
+    # generous analytic SLO: the hand-pinned 2-stage plan must pass
+    # swap_plan's validate() (the MILP would not partition at this scale)
+    prof = replace(prof0, slo_s=base * 8.0)
+    tbl = cm.build_latency_table(prof, cluster)
+    bs, cut, n = 4, 3, prof.n_blocks
+    plan = ClusterPlan(cluster=cluster, pipelines=[PipelinePlan(
+        model_name=cfg.name, batch_size=bs,
+        stages=(
+            StagePlan(0, cut, "tpu-lo", 1, 3,
+                      tbl.partition(0, cut, "tpu-lo", 1, bs)),
+            StagePlan(cut, n, "tpu-hi", 1, 1,
+                      tbl.partition(cut, n, "tpu-hi", 1, bs)),
+        ),
+        xfer_latency_s=(cm.transfer_latency(prof, cluster, "tpu-lo", "tpu-hi",
+                                            cut, bs),),
+    )])
+    lbm = layer_block_map_from_profile(prof, cfg.n_layers)
+    executors = build_executors(cfg, plan, lbm, jax.random.PRNGKey(0))
+    profiles = {cfg.name: prof}
+    runtime = build_runtime(plan, profiles)
+    calibrate_runtime(runtime, executors, seq)
+    p0 = runtime.pipelines[0]
+    # calibrated axis: after calibrate_runtime the virtual clock IS the wall
+    # clock, so the trace's SLO must come from measured latencies
+    e2e = sum(s.latency(1) for s in p0.stages)
+    thr = min(len(s.vdevs) * p0.unified_batch / s.latency(p0.unified_batch)
+              for s in p0.stages)
+    rate = thr * 0.5
+    n_req = 48 if quick else 120
+    trace = poisson_trace(rate, n_req / rate, e2e * 6, cfg.name, seed=13)
+    mid = trace[len(trace) // 2].arrival_s
+
+    # no-swap baseline on an identically calibrated runtime: the recorded
+    # attainment delta then isolates what the swap itself cost
+    rt_base = build_runtime(plan, profiles)
+    calibrate_runtime(rt_base, executors, seq)
+    dp_base = DataPlane(rt_base, dispatcher=PoolDispatcher.from_runtime(
+        rt_base, executors, max_inflight=4), feedback="measured", seq_len=seq)
+    tel_base = dp_base.serve(trace)
+
+    dispatcher = PoolDispatcher.from_runtime(runtime, executors, max_inflight=4)
+    dp = DataPlane(runtime, dispatcher=dispatcher, feedback="measured",
+                   seq_len=seq)
+    state = {}
+
+    def hook(req, t):
+        if not state and t > mid:
+            state["inflight"] = len(dp.jobs)
+            t0 = time.perf_counter()
+            dp.swap_plan(
+                plan, profiles, now=t,
+                dispatcher_factory=lambda rt: PoolDispatcher.from_runtime(
+                    rt, executors, max_inflight=4),
+                runtime_setup=lambda rt: calibrate_runtime(rt, executors, seq),
+                reason="measured-mode refresh",
+            )
+            state["swap_wall_s"] = time.perf_counter() - t0
+
+    dp.arrival_hooks.append(hook)
+    t0 = time.perf_counter()
+    tel = dp.serve(trace)
+    serve_wall = time.perf_counter() - t0
+    assert len(tel.outcomes) == len(trace)
+    assert tel.plan_swaps == 1
+    return {
+        "feedback": "measured",
+        "n_requests": len(trace),
+        "rate_rps": rate,
+        "swap_wall_s": state.get("swap_wall_s"),
+        "swap_inflight_batches": state.get("inflight"),
+        "swap_transient_s": list(tel.swap_transient_s),
+        "plan_swaps": tel.plan_swaps,
+        "epochs_gcd": tel.epochs_gcd,
+        "attainment": tel.attainment,
+        "attainment_no_swap": tel_base.attainment,
+        "attainment_delta_vs_no_swap": tel.attainment - tel_base.attainment,
+        "served": tel.served,
+        "feedback_observations": dp.fb.observations,
+        "serve_wall_s": serve_wall,
+    }
+
+
+def main(quick=False, full=False):
     out = []
     results = []
     combos = [("G1", "HC1-L", False), ("G1", "HC1-L", True)]
@@ -347,13 +492,54 @@ def main(quick=False):
         f"gated_attain={osc['gated']['attainment']:.3f};"
         f"delta_vs_ungated={osc['delta_attainment_vs_ungated']:+.3f}"
     )
-    BENCH_JSON.write_text(json.dumps(
-        {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
-         "rows": results, "drift": drift, "oscillation": osc}, indent=2))
+    payload = {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
+               "rows": results, "drift": drift, "oscillation": osc}
+    if full:
+        # paper-scale (100-device, 3-model) re-planning scenarios — gated
+        # behind --full because they replay ~100k-request traces; affordable
+        # since the scheduler hot-path overhaul (see BENCH_sched.json)
+        drift_full = run_drift("HC1-L", quick=quick, n_models=3)
+        out.append(
+            f"e2e_drift_full[{drift_full['cluster']}"
+            f"|{'->'.join(drift_full['models'])}],"
+            f"{(drift_full['static']['wall_s'] + drift_full['replanned']['wall_s'])*1e6:.0f},"
+            f"static_attain={drift_full['static']['attainment']:.3f};"
+            f"replanned_attain={drift_full['replanned']['attainment']:.3f};"
+            f"delta={drift_full['delta_attainment']:+.3f};"
+            f"swaps={drift_full['replanned']['plan_swaps']}"
+        )
+        osc_full = run_oscillation("HC1-L", quick=quick, n_models=3)
+        out.append(
+            f"e2e_oscillation_full[{osc_full['cluster']}"
+            f"|{'<->'.join(osc_full['models'])}],"
+            f"{(osc_full['ungated']['wall_s'] + osc_full['gated']['wall_s'])*1e6:.0f},"
+            f"swaps_ungated={osc_full['swaps_ungated']};"
+            f"swaps_gated={osc_full['swaps_gated']};"
+            f"swap_reduction={osc_full['swap_reduction']:.1f}x;"
+            f"gated_attain={osc_full['gated']['attainment']:.3f}"
+        )
+        payload["drift_full"] = drift_full
+        payload["oscillation_full"] = osc_full
+    swap = run_swap_measured(quick=quick)
+    out.append(
+        f"e2e_swap_measured,{swap['serve_wall_s']*1e6:.0f},"
+        f"swap_wall_ms={swap['swap_wall_s']*1e3:.1f};"
+        f"transient_ms={max(swap['swap_transient_s'] or [0.0])*1e3:.3f};"
+        f"attain={swap['attainment']:.3f};"
+        f"fb_obs={swap['feedback_observations']}"
+    )
+    payload["swap_measured"] = swap
+    BENCH_JSON.write_text(json.dumps(payload, indent=2))
     out.append(f"e2e_json,0,wrote={BENCH_JSON}")
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for line in main(quick=args.quick, full=args.full):
         print(line)

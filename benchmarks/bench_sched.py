@@ -1,0 +1,249 @@
+"""Scheduler hot-path microbenchmark — old vs new Algorithm 1/2 stack.
+
+Replays a multi-model arrival trace straight through the scheduler (arrivals
++ coalesced wake-ups, no execution events), so the measured wall is pure
+scheduling cost: probe(), reserve(), timeline walks.  Runs the same trace
+through
+
+* the optimized `core.scheduler.ReservationScheduler` (memoized + pruned
+  probes, gated batch-size bisection, timeline fast paths), and
+* the frozen pre-PR stack `core._reference.ReferenceReservationScheduler`
+  over `ReferenceTimeline`s (the genuine old implementation),
+
+at 16-chip (HC1-S) and 100-device (HC1-L) scale, asserts the two decision
+streams are identical (a live equivalence proof on every bench run), and
+emits ``BENCH_sched.json`` with scheduled-requests-per-wall-second, the
+probe wall breakdown, probes/dispatch and the old-vs-new speedup so the
+perf trajectory is tracked across PRs.
+
+CLI:  PYTHONPATH=src python benchmarks/bench_sched.py [--quick]
+        [--assert-floor RPS]   # fail if quick-mode 16-chip scheduled-req/s
+                               # of the optimized scheduler drops below RPS
+"""
+
+from __future__ import annotations
+
+import hashlib
+import heapq
+import itertools
+import json
+import sys
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/bench_sched.py` (CI smoke)
+    sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
+
+from repro.core import plan_cluster
+from repro.core._reference import (
+    ReferenceReservationScheduler,
+    use_reference_timelines,
+)
+from repro.core import _reference, scheduler as sched_mod
+from repro.core.runtime import build_runtime
+from repro.core.scheduler import Dispatch, Drop, ReservationScheduler
+from repro.data.requests import multi_model_trace
+
+if __package__ in (None, ""):
+    from benchmarks.common import GROUPS, HC_LARGE, HC_SMALL, make_setup
+else:
+    from .common import GROUPS, HC_LARGE, HC_SMALL, make_setup
+
+BENCH_JSON = Path("BENCH_sched.json")
+
+SCALES = {
+    # name -> (cluster spec, model archs, load factor)
+    "hc1s_16chip": (HC_SMALL["HC1-S"], GROUPS["G1"][:2], 1.0),
+    "hc1l_100dev": (HC_LARGE["HC1-L"], GROUPS["G1"], 0.9),
+}
+
+
+def _labels(rt):
+    lab = {}
+    for v in rt.vdevs:
+        lab[id(v.timeline)] = ("gpu", v.vdev_id)
+    for n in rt.nodes:
+        lab[id(n.uplink)] = ("ul", n.node_id)
+        lab[id(n.downlink)] = ("dl", n.node_id)
+    return lab
+
+
+def drive(sched_cls, rt, trace, gc_interval_s=1.0, digest=False):
+    """Pure scheduling replay; returns (wall_s, scheduled_reqs, stats,
+    decision-stream sha256 or None).
+
+    The throughput passes run with digest=False so neither side pays
+    serialization cost; the instrumented (probe-timer) passes compute the
+    checksum, which is where the old-vs-new equivalence is asserted."""
+    sched = sched_cls(rt)
+    lab = _labels(rt) if digest else None
+    events = []
+    seq = itertools.count()
+    for req in trace:
+        heapq.heappush(events, (req.arrival_s, next(seq), "arr", req))
+    wakes = {}
+    scheduled = 0
+    h = hashlib.sha256() if digest else None
+    t0 = time.perf_counter()
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        if kind == "arr":
+            sched.enqueue(payload)
+            model = payload.model_name
+        else:
+            wakes.pop(payload, None)
+            model = payload
+        for action in sched.schedule(model, t):
+            if isinstance(action, Dispatch):
+                scheduled += len(action.requests)
+                if h is not None:
+                    pr = action.probe_result
+                    h.update(repr((
+                        "D", action.pipeline.pipeline_id,
+                        tuple(r.req_id for r in action.requests),
+                        pr.finish_time, tuple(v.vdev_id for v in pr.path),
+                        tuple(pr.stage_starts), tuple(pr.xfer_starts),
+                        tuple((lab[id(r.resource)], r.start, r.dur)
+                              for r in pr.reservations),
+                    )).encode())
+            elif isinstance(action, Drop):
+                if h is not None:
+                    h.update(repr(("X", action.request.req_id)).encode())
+            else:
+                cur = wakes.get(model)
+                if h is not None:
+                    h.update(repr(("W", action.time_s)).encode())
+                if cur is None or action.time_s < cur - 1e-9:
+                    wakes[model] = action.time_s
+                    heapq.heappush(events, (action.time_s, next(seq), "wake",
+                                            model))
+        rt.maybe_gc(t, gc_interval_s)
+    wall = time.perf_counter() - t0
+    return wall, scheduled, sched.stats, h.hexdigest() if h else None
+
+
+def _timed_probe(module, attr, box):
+    """Wrap `module.attr` so `box[0]` accumulates its wall time."""
+    orig = getattr(module, attr)
+
+    def wrapped(*a, **k):
+        t0 = time.perf_counter()
+        try:
+            return orig(*a, **k)
+        finally:
+            box[0] += time.perf_counter() - t0
+
+    setattr(module, attr, wrapped)
+    return orig
+
+
+def bench_scale(name, quick=False):
+    cluster, archs, load = SCALES[name]
+    profiles, tables = make_setup(archs, cluster)
+    weights = {a: 1.0 for a in archs}
+    plan = plan_cluster(profiles, tables, cluster, weights=weights).plan
+    horizon = 1.0 if quick else 4.0
+    rates = {a: max(plan.throughput_of(a), 1.0) * load for a in archs}
+    trace = multi_model_trace(rates, horizon,
+                              {m: profiles[m].slo_s for m in profiles}, seed=0)
+
+    def fresh(reference):
+        rt = build_runtime(plan, profiles)
+        if reference:
+            use_reference_timelines(rt)
+        return rt
+
+    # throughput passes (uninstrumented, no serialization on either side)
+    wall_new, sched_new, stats_new, _ = drive(
+        ReservationScheduler, fresh(False), trace)
+    wall_old, sched_old, stats_old, _ = drive(
+        ReferenceReservationScheduler, fresh(True), trace)
+
+    # probe wall breakdown + decision checksums (instrumented passes)
+    box_new, box_old = [0.0], [0.0]
+    orig_new = _timed_probe(sched_mod, "probe", box_new)
+    try:
+        iwall_new, _, _, dig_new = drive(ReservationScheduler, fresh(False),
+                                         trace, digest=True)
+    finally:
+        sched_mod.probe = orig_new
+    orig_old = _timed_probe(_reference, "reference_probe", box_old)
+    try:
+        iwall_old, _, _, dig_old = drive(ReferenceReservationScheduler,
+                                         fresh(True), trace, digest=True)
+    finally:
+        _reference.reference_probe = orig_old
+    if dig_new != dig_old:  # the equivalence proof, live on every bench run
+        raise AssertionError(
+            f"[{name}] optimized scheduler decision stream diverged from the "
+            f"reference ({dig_new[:12]} vs {dig_old[:12]})")
+
+    def side(wall, scheduled, stats, probe_wall, inst_wall):
+        return {
+            "wall_s": wall,
+            "scheduled_requests": scheduled,
+            "scheduled_rps": scheduled / max(wall, 1e-9),
+            "dispatches": stats.dispatches,
+            "drops": stats.drops,
+            "probe_calls": stats.probe_calls,
+            "probe_cache_hits": getattr(stats, "probe_cache_hits", 0),
+            "bisect_searches": getattr(stats, "bisect_searches", 0),
+            "probes_per_dispatch": stats.probes_per_dispatch,
+            "probe_wall_s": probe_wall,
+            "probe_wall_frac": probe_wall / max(inst_wall, 1e-9),
+        }
+
+    return {
+        "trace_requests": len(trace),
+        "horizon_s": horizon,
+        "load_factor": load,
+        "models": archs,
+        "devices": sum(cluster.counts.values()),
+        "decisions_equal": True,
+        "new": side(wall_new, sched_new, stats_new, box_new[0], iwall_new),
+        "old": side(wall_old, sched_old, stats_old, box_old[0], iwall_old),
+        "speedup": (sched_new / max(wall_new, 1e-9))
+                   / max(sched_old / max(wall_old, 1e-9), 1e-9),
+    }
+
+
+def main(quick=False):
+    out = []
+    results = {}
+    for name in SCALES:
+        r = bench_scale(name, quick=quick)
+        results[name] = r
+        out.append(
+            f"sched[{name}],{r['new']['wall_s']*1e6:.0f},"
+            f"scheduled_rps={r['new']['scheduled_rps']:.0f};"
+            f"speedup={r['speedup']:.2f}x;"
+            f"probes_per_dispatch={r['new']['probes_per_dispatch']:.2f}"
+            f"(old={r['old']['probes_per_dispatch']:.2f});"
+            f"probe_wall_frac={r['new']['probe_wall_frac']:.2f};"
+            f"decisions_equal={r['decisions_equal']}"
+        )
+    BENCH_JSON.write_text(json.dumps(
+        {"bench": "sched", "quick": quick, "scales": results}, indent=2))
+    out.append(f"sched_json,0,wrote={BENCH_JSON}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--assert-floor", type=float, default=None,
+                    help="minimum optimized scheduled-req/s at 16-chip scale")
+    args = ap.parse_args()
+    for line in main(quick=args.quick):
+        print(line)
+    if args.assert_floor is not None:
+        got = json.loads(BENCH_JSON.read_text())[
+            "scales"]["hc1s_16chip"]["new"]["scheduled_rps"]
+        if got < args.assert_floor:
+            raise SystemExit(
+                f"scheduler throughput regression: {got:.0f} scheduled-req/s "
+                f"< floor {args.assert_floor:.0f}")
+        print(f"sched_floor,0,ok={got:.0f}>= {args.assert_floor:.0f}")

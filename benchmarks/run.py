@@ -7,13 +7,18 @@ Prints ``name,us_per_call,derived`` CSV lines.  ``--quick`` shrinks sweeps.
   bench_utilization Fig. 8   high/low-class temporal utilization
   bench_ablation    Fig. 10  reservation vs reactive data plane
   bench_sensitivity Fig. 13  SLO scale / class ratio / margin sweeps
+  bench_sched       §5.4     scheduler hot-path old-vs-new (BENCH_sched.json)
   bench_kernels     —        kernel micro-benchmarks
   roofline          §Roofline  table from results/dryrun_*.jsonl
+
+``--full`` additionally runs the paper-scale (HC1-L, 3-model) drift and
+oscillation re-planning scenarios in bench_e2e_load.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -23,6 +28,7 @@ from . import (
     bench_e2e_load,
     bench_kernels,
     bench_milp,
+    bench_sched,
     bench_sensitivity,
     bench_utilization,
     roofline,
@@ -34,6 +40,7 @@ BENCHES = {
     "utilization": bench_utilization.main,
     "ablation": bench_ablation.main,
     "sensitivity": bench_sensitivity.main,
+    "sched": bench_sched.main,
     "kernels": bench_kernels.main,
     "roofline": roofline.main,
 }
@@ -43,6 +50,9 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", choices=list(BENCHES), default=None)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="include paper-scale scenarios (HC1-L 3-model "
+                         "drift/oscillation) in benches that support them")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -50,9 +60,12 @@ def main() -> None:
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
+        kwargs = {"quick": args.quick}
+        if "full" in inspect.signature(fn).parameters:
+            kwargs["full"] = args.full
         t0 = time.perf_counter()
         try:
-            for line in fn(quick=args.quick):
+            for line in fn(**kwargs):
                 print(line, flush=True)
             print(f"bench_{name}_total,{(time.perf_counter()-t0)*1e6:.0f},ok",
                   flush=True)

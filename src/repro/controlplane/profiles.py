@@ -27,6 +27,7 @@ from dataclasses import dataclass, field
 
 from repro.core import costmodel as cm
 from repro.core.costmodel import LatencyTable
+from repro.core.reservation import validate_bisection
 from repro.core.runtime import ClusterRuntime
 from repro.core.types import ClusterSpec, ModelProfile
 
@@ -161,6 +162,9 @@ class ProfileStore:
                                           sp.vfrac, b, means)
                     for b, t in stage.latency_by_batch.items()
                 }
+            # measured ratios vary per batch size and can break the table
+            # monotonicity the scheduler's bisection relies on: re-validate
+            validate_bisection(prt)
 
     def request_cost(self, name: str, source: str = "analytic") -> float:
         """Chip-seconds one request of `name` consumes, as an exchange rate.

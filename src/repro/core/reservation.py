@@ -10,6 +10,16 @@ receiver's downlink (`earliest_slot_multi`).
 
 Feedback correction (`Timeline.correct`) re-synchronizes the scheduler's view
 with actual execution times reported by nodes.
+
+Hot-path notes (DESIGN.md section 8): `Timeline.reserve`/`earliest_slot`
+take O(1) fast paths at the tail (the overwhelmingly common case after
+`gc`), `earliest_slot_multi` is a merged-gap walk visiting each interval at
+most once, and `probe()` stops scanning a pool the moment a member achieves
+the stage's zero-wait lower bound (first-fit early exit — provably the same
+winner under the first-minimum tie-break) and only materializes Reservation
+records for the winning member.  All of this is decision-identical to the
+frozen pre-optimization copy in `core/_reference.py`, enforced bit-for-bit
+by tests/test_sched_equivalence.py.
 """
 
 from __future__ import annotations
@@ -39,12 +49,19 @@ class Timeline:
         """Earliest start >= t such that [start, start+dur) is free."""
         if dur <= 0:
             return t
-        i = bisect.bisect_right(self.ends, t)  # first interval ending after t
+        ends = self.ends
+        if not ends or t >= ends[-1]:
+            return t  # O(1) tail fast path: nothing booked at or after t
+        i = bisect.bisect_right(ends, t)  # first interval ending after t
+        starts = self.starts
+        n = len(starts)
         cur = t
-        while i < len(self.starts):
-            if cur + dur <= self.starts[i] + 1e-12:
+        while i < n:
+            if cur + dur <= starts[i] + 1e-12:
                 return cur
-            cur = max(cur, self.ends[i])
+            e = ends[i]
+            if e > cur:
+                cur = e
             i += 1
         return cur
 
@@ -52,18 +69,34 @@ class Timeline:
         if dur <= 0:
             return
         end = start + dur
-        i = bisect.bisect_left(self.starts, start)
+        starts, ends = self.starts, self.ends
+        if not starts:
+            starts.append(start)
+            ends.append(end)
+            return
+        if start > starts[-1]:
+            # O(1) tail fast path: bisect_left would land past the final
+            # interval, so the only possible neighbour is ends[-1].  Same
+            # merge predicate as the general path below.
+            if ends[-1] >= start - 1e-12:
+                if end > ends[-1]:
+                    ends[-1] = end
+                return
+            starts.append(start)
+            ends.append(end)
+            return
+        i = bisect.bisect_left(starts, start)
         # merge with neighbours if touching/overlapping
-        if i > 0 and self.ends[i - 1] >= start - 1e-12:
+        if i > 0 and ends[i - 1] >= start - 1e-12:
             i -= 1
-            start = min(start, self.starts[i])
-            end = max(end, self.ends[i])
-            del self.starts[i], self.ends[i]
-        while i < len(self.starts) and self.starts[i] <= end + 1e-12:
-            end = max(end, self.ends[i])
-            del self.starts[i], self.ends[i]
-        self.starts.insert(i, start)
-        self.ends.insert(i, end)
+            start = min(start, starts[i])
+            end = max(end, ends[i])
+            del starts[i], ends[i]
+        while i < len(starts) and starts[i] <= end + 1e-12:
+            end = max(end, ends[i])
+            del starts[i], ends[i]
+        starts.insert(i, start)
+        ends.insert(i, end)
 
     def correct(self, planned_start: float, planned_dur: float,
                 actual_start: float, actual_dur: float) -> None:
@@ -72,23 +105,35 @@ class Timeline:
         self.reserve(actual_start, actual_dur)
 
     def release(self, start: float, dur: float) -> None:
-        """Remove [start, start+dur) from the reserved set (splitting if needed)."""
+        """Remove [start, start+dur) from the reserved set (splitting if needed).
+
+        Interval lists are sorted and non-overlapping, so everything ending
+        at/before `start` is a prefix (skipped via bisect) and the first
+        interval starting at/after `end` terminates the scan — O(log n +
+        overlaps) instead of the reference's full O(n) walk.  This is the
+        feedback-correction hot path: `correct()` calls it once per executed
+        stage/transfer."""
         end = start + dur
-        i = 0
-        while i < len(self.starts):
-            s, e = self.starts[i], self.ends[i]
-            if e <= start + 1e-12 or s >= end - 1e-12:
-                i += 1
-                continue
-            del self.starts[i], self.ends[i]
+        starts, ends = self.starts, self.ends
+        # first interval with e > start + 1e-12 (reference skip predicate)
+        i = bisect.bisect_right(ends, start + 1e-12)
+        n = len(starts)
+        while i < n:
+            s, e = starts[i], ends[i]
+            if s >= end - 1e-12:
+                return  # sorted: every later interval starts even further right
+            del starts[i], ends[i]
+            n -= 1
             if s < start:
-                self.starts.insert(i, s)
-                self.ends.insert(i, start)
+                starts.insert(i, s)
+                ends.insert(i, start)
                 i += 1
+                n += 1
             if e > end:
-                self.starts.insert(i, end)
-                self.ends.insert(i, e)
+                starts.insert(i, end)
+                ends.insert(i, e)
                 i += 1
+                n += 1
 
     def busy_between(self, t0: float, t1: float) -> float:
         total = 0.0
@@ -105,16 +150,44 @@ class Timeline:
 
 def earliest_slot_multi(timelines: list[Timeline], t: float, dur: float) -> float:
     """Earliest start >= t at which *all* timelines are free for `dur`
-    (paper: simultaneous uplink+downlink availability)."""
+    (paper: simultaneous uplink+downlink availability).
+
+    Merged-gap walk: every timeline keeps a cursor at its first interval
+    that could still block the candidate start, and each interval is visited
+    at most once — O(total intervals) worst case, replacing the old capped
+    fixpoint iteration (which redid bisects per round and could bail out
+    non-converged at pathological fragmentation).  The result is the least
+    common free point, i.e. exactly the old fixpoint."""
+    if dur <= 0:
+        return t
     cur = t
-    for _ in range(1000):
-        nxt = cur
-        for tl in timelines:
-            nxt = max(nxt, tl.earliest_slot(nxt, dur))
-        if nxt == cur:
+    tail_free = True
+    for tl in timelines:
+        if tl.ends and cur < tl.ends[-1]:
+            tail_free = False
+            break
+    if tail_free:
+        return cur  # O(1): past every booking on every timeline
+    if len(timelines) == 1:
+        return timelines[0].earliest_slot(cur, dur)
+    idx = [bisect.bisect_right(tl.ends, cur) for tl in timelines]
+    while True:
+        moved = False
+        for k, tl in enumerate(timelines):
+            starts, ends = tl.starts, tl.ends
+            i = idx[k]
+            n = len(starts)
+            while i < n:
+                if cur + dur <= starts[i] + 1e-12:
+                    break  # free window on this timeline at cur
+                e = ends[i]
+                if e > cur:
+                    cur = e
+                    moved = True
+                i += 1
+            idx[k] = i
+        if not moved:
             return cur
-        cur = nxt
-    return cur  # pragma: no cover - pathological fragmentation
 
 
 # ----------------------------------------------------------------------------
@@ -181,6 +254,13 @@ class StageRuntime:
     # stage at its observed speed (paper section 5.4, feedback correction).
     lat_scale: float = 1.0
 
+    # lazily computed pool facts for probe()'s early-exit threshold: the set
+    # of member node identities and the best member NIC bandwidth.  Static
+    # after build_runtime (pool membership never changes within a plan
+    # epoch; a swap builds a fresh runtime).
+    _node_ids: frozenset | None = field(default=None, repr=False, compare=False)
+    _bw_max: float = field(default=0.0, repr=False, compare=False)
+
     def latency(self, bs: int) -> float:
         return self._base_latency(bs) * self.lat_scale
 
@@ -193,6 +273,13 @@ class StageRuntime:
                 return self.latency_by_batch[b]
         return self.latency_by_batch[max(self.latency_by_batch)]
 
+    def _pool_info(self) -> tuple[frozenset, float]:
+        ids = self._node_ids
+        if ids is None:
+            ids = self._node_ids = frozenset(id(v.node) for v in self.vdevs)
+            self._bw_max = max((v.node.nic_bw for v in self.vdevs), default=0.0)
+        return ids, self._bw_max
+
 
 @dataclass
 class PipelineRuntime:
@@ -200,10 +287,66 @@ class PipelineRuntime:
     model_name: str
     unified_batch: int
     stages: list[StageRuntime]
+    # True when probe(pipeline, bs, now).finish_time is provably monotone
+    # non-decreasing in bs, so the scheduler's batch-size search may bisect
+    # instead of scanning linearly.  Set by validate_bisection() at
+    # runtime-build / re-calibration time; defaults to the always-correct
+    # linear fallback.  See DESIGN.md section 8 for the argument.
+    bisection_ok: bool = False
+
+
+def validate_bisection(pipeline: PipelineRuntime) -> bool:
+    """Decide whether batch-size bisection is decision-safe for `pipeline`
+    and stamp `pipeline.bisection_ok`.
+
+    probe()'s finish time is monotone non-decreasing in bs when every
+    per-member finish is monotone AND the per-member timing environment does
+    not depend on which member won the previous stage.  Concretely:
+
+    * every stage's latency table must induce a non-decreasing latency over
+      1..unified_batch (measured tables can violate this — profiling noise);
+      `lat_scale` is a positive uniform multiplier, so feedback correction
+      preserves the ordering and needs no re-validation;
+    * transfer duration is linear in bs and `earliest_slot`/`_multi` are
+      monotone in (t, dur) — always true;
+    * for every receiving stage (in_bytes > 0) the UPSTREAM pool must live
+      on a single node.  Otherwise the greedy winner of the previous stage
+      can switch nodes as bs grows, changing the uplink timeline and the
+      co-location pattern the next stage sees — which genuinely breaks
+      monotonicity (stricter than the obvious table-only condition; see
+      DESIGN.md section 8).
+
+    Call again after replacing any `latency_by_batch` table
+    (calibrate_runtime, ProfileStore.reprice_runtime do)."""
+    ok = True
+    for si, stage in enumerate(pipeline.stages):
+        prev = None
+        for b in range(1, pipeline.unified_batch + 1):
+            cur = stage._base_latency(b)
+            if prev is not None and cur < prev:
+                ok = False
+                break
+            prev = cur
+        if not ok:
+            break
+        if si > 0 and stage.in_bytes_per_req > 0:
+            if len({id(v.node) for v in pipeline.stages[si - 1].vdevs}) > 1:
+                ok = False
+                break
+    pipeline.bisection_ok = ok
+    return ok
 
 
 def probe(pipeline: PipelineRuntime, bs: int, now: float) -> ProbeResult:
-    """Algorithm 2, probe(): greedy per-stage pool-member selection."""
+    """Algorithm 2, probe(): greedy per-stage pool-member selection.
+
+    Decision-identical to `_reference.reference_probe` (the pre-optimization
+    copy) but with the pool scan pruned: a member whose resources are free
+    on arrival achieves the stage's zero-wait lower bound, and no member —
+    scanned or not — can beat that bound, so the scan stops there.  Since
+    the reference keeps the FIRST strict minimum, the first member to hit
+    the bound is exactly the member the full scan would have chosen.
+    Reservation records are built only for the winning member."""
     t_g = now
     path: list[VDevRes] = []
     resv: list[Reservation] = []
@@ -216,42 +359,62 @@ def probe(pipeline: PipelineRuntime, bs: int, now: float) -> ProbeResult:
 
     for si, stage in enumerate(pipeline.stages):
         l_i = stage.latency(bs)
-        best = None  # (finish, gpu, local_resv, wait_delta, xs, xd, ss)
+        in_bytes = stage.in_bytes_per_req
+        xfer = last is not None and in_bytes > 0
+        if xfer:
+            last_node = last.node
+            last_bw = last_node.nic_bw
+            ul = last_node.uplink
+            node_ids, bw_max = stage._pool_info()
+            if id(last_node) in node_ids:
+                # some member is co-located: zero-wait bound skips the xfer
+                threshold = t_g + l_i
+            else:
+                # every member pays a transfer; the best case uses the
+                # fattest member NIC.  Same association order as the member
+                # arithmetic below so equality is exact in floats.
+                bwm = last_bw if last_bw < bw_max else bw_max
+                threshold = (t_g + in_bytes * bs / bwm) + l_i
+        else:
+            threshold = t_g + l_i
+        best_finish = INF
+        best = None  # (gpu, wait_delta, xs, xd, ss)
         for gpu in stage.vdevs:
             t = t_g
-            local: list[Reservation] = []
             w = 0.0
             xs = xd = 0.0
-            if last is not None and stage.in_bytes_per_req > 0:
-                bw = min(last.node.nic_bw, gpu.node.nic_bw)
-                l_n = stage.in_bytes_per_req * bs / bw
-                if last.node is gpu.node:
+            if xfer:
+                gpu_node = gpu.node
+                bw = last_bw if last_bw < gpu_node.nic_bw else gpu_node.nic_bw
+                l_n = in_bytes * bs / bw
+                if last_node is gpu_node:
                     l_n = 0.0  # co-located: feature map stays on host
                 if l_n > 0:
-                    s = earliest_slot_multi(
-                        [last.node.uplink, gpu.node.downlink], t, l_n
-                    )
+                    s = earliest_slot_multi([ul, gpu_node.downlink], t, l_n)
                     w += s - t
-                    local.append(Reservation(last.node.uplink, s, l_n, "ul"))
-                    local.append(Reservation(gpu.node.downlink, s, l_n, "dl"))
                     xs, xd = s, l_n
                     t = s + l_n
             s = gpu.timeline.earliest_slot(t, l_i)
             w += s - t
-            local.append(Reservation(gpu.timeline, s, l_i, "gpu", holder=gpu))
             finish = s + l_i
-            if best is None or finish < best[0]:
-                best = (finish, gpu, local, w, xs, xd, s)
-        finish, gpu, local, w, xs, xd, ss = best
+            if finish < best_finish:
+                best_finish = finish
+                best = (gpu, w, xs, xd, s)
+                if finish <= threshold:
+                    break  # zero-wait bound hit: no member can beat this
+        gpu, w, xs, xd, ss = best
         path.append(gpu)
-        resv.extend(local)
+        if xd > 0.0:
+            resv.append(Reservation(ul, xs, xd, "ul"))
+            resv.append(Reservation(gpu.node.downlink, xs, xd, "dl"))
+        resv.append(Reservation(gpu.timeline, ss, l_i, "gpu", holder=gpu))
         wait += w
         stage_starts.append(ss)
-        stage_durs.append(stage.latency(bs))
+        stage_durs.append(l_i)
         if si > 0:
             xfer_starts.append(xs)
             xfer_durs.append(xd)
-        t_g = finish
+        t_g = best_finish
         last = gpu
 
     return ProbeResult(

@@ -13,7 +13,13 @@ from dataclasses import dataclass, field
 
 from . import costmodel
 from .plan import ClusterPlan, PipelinePlan
-from .reservation import NodeRes, PipelineRuntime, StageRuntime, VDevRes
+from .reservation import (
+    NodeRes,
+    PipelineRuntime,
+    StageRuntime,
+    VDevRes,
+    validate_bisection,
+)
 from .types import ClusterSpec, ModelProfile
 
 
@@ -24,6 +30,7 @@ class ClusterRuntime:
     nodes: list[NodeRes] = field(default_factory=list)
     vdevs: list[VDevRes] = field(default_factory=list)
     pipelines: list[PipelineRuntime] = field(default_factory=list)
+    _last_gc: float = 0.0
 
     def pipelines_of(self, model_name: str) -> list[PipelineRuntime]:
         return [p for p in self.pipelines if p.model_name == model_name]
@@ -34,6 +41,32 @@ class ClusterRuntime:
         for n in self.nodes:
             n.uplink.gc(now)
             n.downlink.gc(now)
+
+    def maybe_gc(self, now: float, interval_s: float = 1.0) -> bool:
+        """Amortized timeline GC: run `gc(now)` at most every `interval_s`
+        virtual seconds.  The shared cadence knob of the simulator's and the
+        DataPlane's drive loops — GC only drops intervals fully in the past,
+        which no future-facing probe can see, so cadence is decision-neutral
+        and purely a probe-cost/GC-cost trade (the regression test in
+        tests/test_sched_equivalence.py keeps probe cost flat in trace
+        length).  A `now` behind the watermark means the virtual clock
+        restarted (the runtime is being reused for a fresh serve): reset
+        rather than silently never GC'ing again."""
+        if now - self._last_gc > interval_s or now < self._last_gc:
+            self.gc(now)
+            self._last_gc = now
+            return True
+        return False
+
+    def timeline_intervals(self) -> int:
+        """Booked intervals across every resource timeline — the quantity GC
+        bounds, and what probe cost scales with."""
+        total = 0
+        for v in self.vdevs:
+            total += len(v.timeline.starts)
+        for n in self.nodes:
+            total += len(n.uplink.starts) + len(n.downlink.starts)
+        return total
 
 
 def build_runtime(
@@ -103,14 +136,14 @@ def build_runtime(
                     vdevs=vdevs, latency_by_batch=lat_by_b, in_bytes_per_req=in_bytes
                 )
             )
-        rt.pipelines.append(
-            PipelineRuntime(
-                pipeline_id=pid,
-                model_name=pp.model_name,
-                unified_batch=pp.batch_size,
-                stages=stages,
-            )
+        pruntime = PipelineRuntime(
+            pipeline_id=pid,
+            model_name=pp.model_name,
+            unified_batch=pp.batch_size,
+            stages=stages,
         )
+        validate_bisection(pruntime)
+        rt.pipelines.append(pruntime)
     return rt
 
 

@@ -5,6 +5,19 @@ The reservation scheduler makes three decisions per batch: which pooled
 pipeline (lowest probe() waiting time at the pipeline's unified batch size),
 which path within it, and the largest batch size whose probed completion time
 meets the oldest request's deadline.  It then drops / waits / dispatches.
+
+Hot-path structure (DESIGN.md section 8): probe() is pure given the
+reservation timelines, and within one `schedule()` call the timelines only
+move when a dispatch commits via `reserve()`.  So probes are memoized per
+(pipeline, batch size) and the memo is invalidated exactly at `reserve()`:
+Step 2 reuses Step 1's unified-batch probe instead of re-probing, drop
+storms stop re-probing every pipeline per popped request, and the
+last-moment shrink re-uses any batch size the search already priced.  The
+batch-size search itself bisects in O(log B) when `validate_bisection`
+proved finish_time monotone in bs for the pipeline, and falls back to the
+reference linear scan otherwise — every path is decision-identical to the
+frozen pre-optimization copy in `core/_reference.py`, enforced by
+tests/test_sched_equivalence.py.
 """
 
 from __future__ import annotations
@@ -12,7 +25,7 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
-from .reservation import PipelineRuntime, ProbeResult, probe, reserve
+from .reservation import INF, PipelineRuntime, ProbeResult, probe, reserve
 from .runtime import ClusterRuntime
 from .types import Request
 
@@ -39,6 +52,11 @@ class SchedulerStats:
     probe_calls: int = 0
     dispatches: int = 0
     drops: int = 0
+    # memo hits: decisions that the pre-PR scheduler paid a probe() for and
+    # the optimized one served from the per-round cache
+    probe_cache_hits: int = 0
+    # Step-2 searches resolved by bisection instead of the linear scan
+    bisect_searches: int = 0
 
     @property
     def probes_per_dispatch(self) -> float:
@@ -61,6 +79,9 @@ class ReservationScheduler:
             queues if queues is not None else {}
         )
         self.stats = SchedulerStats()
+        # model -> pipelines, resolved once: runtime.pipelines is immutable
+        # after build (a plan swap installs a whole new runtime + scheduler)
+        self._by_model: dict[str, list[PipelineRuntime]] = {}
         for p in runtime.pipelines:
             self.queues.setdefault(p.model_name, deque())
 
@@ -70,33 +91,80 @@ class ReservationScheduler:
     def pending(self, model: str) -> int:
         return len(self.queues.get(model, ()))
 
+    def _pipelines_of(self, model: str) -> list[PipelineRuntime]:
+        ps = self._by_model.get(model)
+        if ps is None:
+            ps = self._by_model[model] = self.runtime.pipelines_of(model)
+        return ps
+
+    def _probe_cached(self, cache: dict, p: PipelineRuntime, bs: int,
+                      now: float) -> ProbeResult:
+        key = (p.pipeline_id, bs)
+        r = cache.get(key)
+        if r is None:
+            r = probe(p, bs, now)
+            self.stats.probe_calls += 1
+            cache[key] = r
+        else:
+            self.stats.probe_cache_hits += 1
+        return r
+
     def schedule(self, model: str, now: float) -> list[Dispatch | Drop | WaitUntil]:
         """Run Algorithm 1 until the queue cannot make progress at `now`."""
         out: list[Dispatch | Drop | WaitUntil] = []
         q = self.queues.get(model)
-        pipelines = self.runtime.pipelines_of(model)
+        pipelines = self._pipelines_of(model)
         if not q or not pipelines:
             return out
+        stats = self.stats
+        # (pipeline_id, bs) -> ProbeResult.  probe() is pure given the
+        # timelines and `now` is fixed for this call, so entries stay exact
+        # across loop iterations (drops don't move timelines) and are
+        # invalidated wholesale at each reserve().
+        cache: dict[tuple[int, int], ProbeResult] = {}
         while q:
             # Step 1: pick the pipeline with the lowest waiting time at its
             # unified batch size.
-            best_p, best_wait = None, float("inf")
+            best_p, best_r, best_wait = None, None, INF
             for p in pipelines:
-                r = probe(p, p.unified_batch, now)
-                self.stats.probe_calls += 1
+                r = self._probe_cached(cache, p, p.unified_batch, now)
                 if r.wait_time < best_wait:
-                    best_wait, best_p = r.wait_time, p
+                    best_wait, best_p, best_r = r.wait_time, p, r
             p = best_p
-            # Step 2: largest batch size meeting the oldest deadline.
+            # Step 2: largest batch size meeting the oldest deadline.  The
+            # unified-batch probe IS the Step-1 result — reuse it.
+            deadline = q[0].deadline_s + 1e-12
             chosen_bs, chosen_r = 0, None
-            for bs in range(p.unified_batch, 0, -1):
-                r = probe(p, bs, now)
-                self.stats.probe_calls += 1
-                if r.finish_time <= q[0].deadline_s + 1e-12:
-                    chosen_bs, chosen_r = bs, r
-                    break
+            if best_r.finish_time <= deadline:
+                chosen_bs, chosen_r = p.unified_batch, best_r
+            elif p.unified_batch > 1:
+                if p.bisection_ok:
+                    # finish_time monotone in bs (validated at build time)
+                    # => feasibility downward-closed => largest feasible
+                    # batch found in O(log B) probes.
+                    stats.bisect_searches += 1
+                    lo, hi = 0, p.unified_batch - 1
+                    while lo < hi:
+                        mid = (lo + hi + 1) // 2
+                        r = self._probe_cached(cache, p, mid, now)
+                        if r.finish_time <= deadline:
+                            lo = mid
+                        else:
+                            hi = mid - 1
+                    if lo > 0:
+                        # lo was only ever set by a feasible probe: cached
+                        chosen_bs = lo
+                        chosen_r = cache[(p.pipeline_id, lo)]
+                else:
+                    # linear fallback: correctness never depends on
+                    # profiling artifacts (non-monotone measured tables)
+                    for bs in range(p.unified_batch - 1, 0, -1):
+                        r = self._probe_cached(cache, p, bs, now)
+                        if r.finish_time <= deadline:
+                            chosen_bs, chosen_r = bs, r
+                            break
             if chosen_bs == 0:
-                self.stats.drops += 1
+                stats.drops += 1
                 out.append(Drop(q.popleft()))
                 continue  # start over with the next oldest request
             if len(q) < chosen_bs:
@@ -107,16 +175,18 @@ class ReservationScheduler:
                 if slack > 1e-6:
                     out.append(WaitUntil(wake))
                     break
-                chosen_bs = len(q)  # last moment: dispatch what we have
-                chosen_r = probe(p, chosen_bs, now)
-                self.stats.probe_calls += 1
+                # last moment: dispatch what we have (memoized if the
+                # search already priced this batch size this round)
+                chosen_bs = len(q)
+                chosen_r = self._probe_cached(cache, p, chosen_bs, now)
                 if chosen_r.finish_time > q[0].deadline_s + 1e-12:
-                    self.stats.drops += 1
+                    stats.drops += 1
                     out.append(Drop(q.popleft()))
                     continue
             reserve(chosen_r)
+            cache.clear()  # reservations moved the timelines: memo is stale
             batch = [q.popleft() for _ in range(chosen_bs)]
-            self.stats.dispatches += 1
+            stats.dispatches += 1
             out.append(Dispatch(pipeline=p, requests=batch, probe_result=chosen_r))
         return out
 

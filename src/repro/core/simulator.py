@@ -57,11 +57,15 @@ class Simulator:
         noise_sigma: float = 0.02,
         seed: int = 0,
         reactive: bool = False,
+        gc_interval_s: float = 1.0,
     ) -> None:
         self.rt = runtime
         self.trace = sorted(trace)
         self.rng = np.random.default_rng(seed)
         self.noise_sigma = noise_sigma
+        # amortized timeline-GC cadence (decision-neutral, see
+        # ClusterRuntime.maybe_gc); math.inf disables GC entirely
+        self.gc_interval_s = gc_interval_s
         self.sched = (
             ReactiveScheduler(runtime) if reactive else ReservationScheduler(runtime)
         )
@@ -87,7 +91,6 @@ class Simulator:
         for req in self.trace:
             self.push(req.arrival_s, self.ARRIVAL, req)
         horizon = self.trace[-1].arrival_s if self.trace else 0.0
-        last_gc = 0.0
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)
             if kind == self.ARRIVAL:
@@ -101,9 +104,7 @@ class Simulator:
                 self._on_stage_done(t, payload)
             elif kind == self.XFER_DONE:
                 self._on_xfer_done(t, payload)
-            if t - last_gc > 1.0:
-                self.rt.gc(t)
-                last_gc = t
+            self.rt.maybe_gc(t, self.gc_interval_s)
             horizon = max(horizon, t)
         return SimResult(
             outcomes=self.outcomes,
@@ -231,7 +232,9 @@ def run_simulation(
     noise_sigma: float = 0.02,
     seed: int = 0,
     reactive: bool = False,
+    gc_interval_s: float = 1.0,
 ) -> SimResult:
     return Simulator(
-        runtime, trace, noise_sigma=noise_sigma, seed=seed, reactive=reactive
+        runtime, trace, noise_sigma=noise_sigma, seed=seed, reactive=reactive,
+        gc_interval_s=gc_interval_s,
     ).run()

@@ -7,6 +7,12 @@ simulator drives; the batcher's job is to own the admission-controlled
 queues (queues.py) and hand them to that scheduler, so that simulated and
 real execution provably follow one implementation (see the parity test in
 tests/test_dataplane.py).
+
+`scheduler_cls` lets callers inject an alternative Algorithm 1
+implementation: `DataPlane(scheduler_cls=...)` threads through here, and the
+decision-equivalence suite uses it to run the frozen pre-optimization
+scheduler (`core._reference.ReferenceReservationScheduler`) through the
+whole plane and prove bit-identical outcomes against the optimized default.
 """
 
 from __future__ import annotations

@@ -39,6 +39,7 @@ class _InFlight:
     outputs: list  # per-stage output arrays (async futures)
     submit_wall: float
     ready_wall: list  # per-stage wall timestamp once observed ready
+    epoch: int = 0  # plan epoch at submit time (telemetry bucketing)
 
 
 @dataclass
@@ -50,6 +51,11 @@ class CompletedBatch:
     stage_wall_s: list  # measured wall duration per stage
     submit_wall: float
     done_wall: float
+    # plan epoch the batch was SUBMITTED under.  A dispatcher may serve
+    # several epochs (swap_plan's factory can return the same instance), and
+    # pipeline ids restart at 0 per epoch — telemetry keys stage walls by
+    # (epoch, pipeline, stage), so the batch must carry its own epoch
+    epoch: int = 0
 
     @property
     def total_wall_s(self) -> float:
@@ -65,6 +71,10 @@ class PoolDispatcher:
         self.executors = executors_by_pipeline
         # vdev_id -> (stage_idx, member_idx); lets probe paths name members
         self.vdev_map = vdev_map or {}
+        # stamped onto every submitted batch; the DataPlane keeps it in sync
+        # with its plan epoch so a dispatcher reused across swap_plan calls
+        # still buckets measurements under the epoch that submitted them
+        self.current_epoch = 0
         self.max_inflight = max(1, max_inflight)
         self._inflight: list[_InFlight] = []
         self._completed: list[CompletedBatch] = []
@@ -110,6 +120,7 @@ class PoolDispatcher:
             outputs=outputs,
             submit_wall=t0,
             ready_wall=[None] * len(outputs),
+            epoch=self.current_epoch,
         )
         self._inflight.append(job)
         self.submitted += 1
@@ -205,6 +216,7 @@ class PoolDispatcher:
             stage_wall_s=walls,
             submit_wall=job.submit_wall,
             done_wall=job.ready_wall[-1],
+            epoch=job.epoch,
         )
         self._completed.append(done)
         self._done_by_id[job.job_id] = done

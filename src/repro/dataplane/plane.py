@@ -83,6 +83,8 @@ class DataPlane:
         seq_len: int = 32,
         token_fn=None,
         feedback_alpha: float = 0.4,
+        gc_interval_s: float = 1.0,
+        scheduler_cls=None,
     ) -> None:
         if feedback not in ("planned", "measured"):
             raise ValueError(f"feedback must be planned|measured, got {feedback!r}")
@@ -91,6 +93,14 @@ class DataPlane:
         self.policy = policy
         self.feedback = feedback
         self.feedback_alpha = feedback_alpha
+        # amortized timeline-GC cadence in virtual seconds (decision-neutral,
+        # see ClusterRuntime.maybe_gc); math.inf disables GC
+        self.gc_interval_s = gc_interval_s
+        # Algorithm 1 implementation the batcher drives; None = the shared
+        # optimized ReservationScheduler.  The equivalence suite injects the
+        # frozen `core._reference.ReferenceReservationScheduler` here to
+        # prove the whole plane is decision-identical under either.
+        self.scheduler_cls = scheduler_cls
         self.seq_len = seq_len
         self.token_fn = token_fn or _default_tokens
         self.tel = Telemetry()
@@ -147,8 +157,18 @@ class DataPlane:
         epoch-keyed resource-free maps.  Shared by __init__ (epoch 0) and
         swap_plan (subsequent epochs) so the two paths cannot diverge."""
         self.rt = runtime
-        self.batcher = AdaptiveBatcher(runtime, self.policy)
+        if self.scheduler_cls is None:
+            self.batcher = AdaptiveBatcher(runtime, self.policy)
+        else:
+            self.batcher = AdaptiveBatcher(runtime, self.policy,
+                                           scheduler_cls=self.scheduler_cls)
         self.dispatcher = dispatcher
+        if dispatcher is not None:
+            # batches submitted from now on belong to this plan epoch — the
+            # same dispatcher instance may legitimately serve several epochs
+            # (swap_plan factories can reuse compiled executors), and stage
+            # walls must not blend across them
+            dispatcher.current_epoch = self.epoch
         self.fb = (
             FeedbackController(runtime, alpha=self.feedback_alpha,
                                adapt_latency=self.feedback == "measured")
@@ -170,7 +190,6 @@ class DataPlane:
         for req in trace:
             self.push(req.arrival_s, self.ARRIVAL, req)
         horizon = trace[-1].arrival_s if trace else 0.0
-        last_gc = 0.0
         while self.events:
             t, _, kind, payload = heapq.heappop(self.events)
             if kind == self.ARRIVAL:
@@ -182,9 +201,7 @@ class DataPlane:
                 self._on_stage_done(t, payload)
             elif kind == self.XFER_DONE:
                 self._on_xfer_done(t, payload)
-            if t - last_gc > 1.0:
-                self.rt.gc(t)
-                last_gc = t
+            self.rt.maybe_gc(t, self.gc_interval_s)
             horizon = max(horizon, t)
         self.tel.horizon_s = max(horizon, 1e-9)
         probes = self._retired_probe_calls + self.batcher.stats.probe_calls
@@ -449,7 +466,7 @@ class DataPlane:
             # belt-and-braces: swap_plan never retires the live dispatcher,
             # but shutting down a still-serving object would silently drop
             # every subsequent batch, so guard here too
-            self._harvest_dispatcher(epoch, disp)
+            self._harvest_dispatcher(disp)
             disp.shutdown()
         self.tel.absorb_epoch(epoch, rt)
         self.tel.epochs_gcd += 1
@@ -612,26 +629,28 @@ class DataPlane:
         ))
 
     # -------------------------------------------------------------- wall side
-    def _harvest_dispatcher(self, epoch: int, disp: PoolDispatcher) -> None:
+    def _harvest_dispatcher(self, disp: PoolDispatcher) -> None:
         disp.drain_all()
         for c in disp.take_completed():
             self.tel.batch_wall_s.append(c.total_wall_s)
             for si, w in enumerate(c.stage_wall_s):
-                # keyed by epoch too: pipeline ids restart at 0 after a
-                # swap, and stage walls of unrelated partitions must not
-                # blend into one percentile bucket
+                # keyed by the epoch the batch was SUBMITTED under (stamped
+                # by the dispatcher — _install_runtime keeps current_epoch
+                # in sync, so this is exact even when one dispatcher serves
+                # several epochs): pipeline ids restart at 0 after a swap,
+                # and stage walls of unrelated partitions must not blend
+                # into one percentile bucket
                 self.tel.stage_wall_s.setdefault(
-                    (epoch, c.pipeline_id, si), []).append(w)
+                    (c.epoch, c.pipeline_id, si), []).append(w)
         self.tel.inflight_hwm = max(self.tel.inflight_hwm, disp.inflight_hwm)
 
     def _harvest_measurements(self) -> None:
         # dispatchers of GC'd epochs were harvested at retire time; this
         # covers surviving retired epochs (epoch_gc off) + the live one
-        for epoch, disp in (*self._retired_dispatchers.items(),
-                            (self.epoch, self.dispatcher)):
+        for disp in (*self._retired_dispatchers.values(), self.dispatcher):
             if disp is None:
                 continue
-            self._harvest_dispatcher(epoch, disp)
+            self._harvest_dispatcher(disp)
 
 
 def serve_trace(
@@ -719,4 +738,7 @@ def calibrate_runtime(runtime: ClusterRuntime, executors_by_pipeline,
             stage.lat_scale = 1.0
             for bs, dt in per_stage[si].items():
                 measured[(p.pipeline_id, si, bs)] = dt
+        # measured tables may be non-monotone (profiling noise): re-decide
+        # whether the batch-size bisection stays decision-safe
+        reservation.validate_bisection(p)
     return measured

@@ -303,6 +303,41 @@ def test_real_dataplane_serves_trace_with_overlap(real_pipeline):
     assert tel.attainment > 0.9  # low virtual load on a valid plan
 
 
+def test_stage_walls_bucket_by_submit_epoch_on_shared_dispatcher(real_pipeline):
+    """A swap_plan factory may return the SAME dispatcher (shared compiled
+    executors).  Batches must still bucket their measured stage walls under
+    the plan epoch that SUBMITTED them — pipeline ids restart at 0 per
+    epoch, so blending epochs would corrupt the percentile telemetry."""
+    from repro.core.runtime import build_runtime as _br
+
+    from repro.dataplane import PoolDispatcher
+
+    cfg, prof, plan, executors, seq = real_pipeline
+    rt = _br(plan, {cfg.name: prof})
+    thr = plan.throughput
+    trace = poisson_trace(thr * 0.5, 24 / (thr * 0.5), prof.slo_s, cfg.name,
+                          seed=9)
+    disp = PoolDispatcher.from_runtime(rt, executors, max_inflight=4)
+    dp = DataPlane(rt, dispatcher=disp, feedback="planned", seq_len=seq)
+    mid = trace[len(trace) // 2].arrival_s
+    fired = []
+
+    def hook(req, t):
+        if not fired and t > mid:
+            fired.append(t)
+            dp.swap_plan(plan, {cfg.name: prof}, now=t,
+                         dispatcher_factory=lambda _rt: disp)
+
+    dp.arrival_hooks.append(hook)
+    tel = dp.serve(trace)
+    assert tel.plan_swaps == 1
+    epochs = {k[0] for k in tel.stage_wall_s}
+    assert epochs == {0, 1}  # both epochs measured, neither blended away
+    n_batches = sum(len(ws) for (e, p, si), ws in tel.stage_wall_s.items()
+                    if si == 0)
+    assert n_batches == len(tel.dispatches)
+
+
 def test_real_measured_feedback_end_to_end(real_pipeline):
     from repro.core.runtime import build_runtime as _br
 
