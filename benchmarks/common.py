@@ -1,15 +1,15 @@
 """Shared benchmark fixtures: the HC cluster setups of paper Table 1 mapped to
 TPU classes, and the DNN-stand-in profiles (assigned LM archs at serving
-sequence lengths in place of the paper's 18 CNNs)."""
+sequence lengths in place of the paper's 18 CNNs).  Profiling routes through
+the public facade (`repro.api.profile_model`/`build_profile_store`), so the
+benchmarks price models exactly as a `Session` does."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_config
-from repro.core import blocks, costmodel as cm
+from repro.api import ModelSpec, build_profile_store, profile_model
 from repro.core.types import ClusterSpec, ModelProfile
-from repro.models.model_zoo import layer_costs
 
 # Paper Table 1, large (100-dev simulator) and small (16-dev testbed) setups.
 HC_LARGE = {
@@ -31,30 +31,26 @@ HC_SMALL = {
 SERVE_SEQ = 256
 
 
+def model_spec(arch: str, slo_scale: float = 5.0, n_blocks: int = 10
+               ) -> ModelSpec:
+    """The benchmark-standard ModelSpec: SERVE_SEQ request chunks, paper SLO."""
+    return ModelSpec(arch=arch, slo_scale=slo_scale, seq_len=SERVE_SEQ,
+                     n_blocks=n_blocks)
+
+
 def profile_for(arch: str, cluster: ClusterSpec, slo_scale: float = 5.0,
                 n_blocks: int = 10) -> ModelProfile:
-    cfg = get_config(arch)
-    costs = layer_costs(cfg, SERVE_SEQ)
-    fastest = max(
-        (cluster.accel(c) for c in cluster.classes), key=lambda a: a.peak_flops
-    )
-    prof0 = blocks.build_profile(arch, costs, slo_s=1.0, n_blocks=n_blocks,
-                                 accel=fastest)
-    base_lat = sum(
-        cm.block_latency(b, fastest, 1, 1) for b in prof0.blocks
-    )
-    from repro.core.types import replace
-
-    return replace(prof0, slo_s=base_lat * slo_scale)
+    return profile_model(model_spec(arch, slo_scale, n_blocks), cluster)
 
 
 def make_setup(arch_group: list[str], cluster: ClusterSpec, slo_scale=5.0,
                slo_margin=0.4, batch_sizes=(1, 2, 4, 8), vfracs=(1, 2, 4)):
-    profiles = {a: profile_for(a, cluster, slo_scale) for a in arch_group}
-    tables = {
-        a: cm.build_latency_table(p, cluster, vfracs=vfracs, batch_sizes=batch_sizes)
-        for a, p in profiles.items()
-    }
+    store = build_profile_store(
+        cluster, [model_spec(a, slo_scale) for a in arch_group],
+        vfracs=vfracs, batch_sizes=batch_sizes,
+    )
+    profiles = {a: store.profiles[a] for a in arch_group}
+    tables = {a: store.analytic_table(a) for a in arch_group}
     return profiles, tables
 
 

@@ -1,25 +1,21 @@
 """Microscopic plan analysis (paper section 7.5, Fig. 11): show the pooled
 pipelines PPipe builds for one model on a 16-chip testbed, including partition
 points, vGPU fractions, unified batch sizes and per-stage throughput matching.
-Every solver runs through the one `repro.controlplane.Planner` facade; in
---quick mode (the CI smoke run) the literal MILP backend is cross-checked
-against the template enumerator on the same instance.
+Everything flows through the public `repro.api` facade: one declarative
+`ServeConfig`, one profiling pass, and one `session.solve(backend=...)` per
+solver; in --quick mode (the CI smoke run) the literal MILP backend is
+cross-checked against the template enumerator on the same instance.
 
     PYTHONPATH=src python examples/plan_explorer.py [--arch internlm2-20b] [--quick]
+    # or, after `pip install -e .`: python examples/plan_explorer.py
 """
 
 import argparse
-import os
-import sys
 
-sys.path.insert(0, "src")
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-
+from repro.api import ClusterSpec, ModelSpec, Objective, ServeConfig, Session
 from repro.configs import ARCH_IDS
-from repro.controlplane import Objective, Planner
-from repro.core.types import ClusterSpec
 
-from benchmarks.common import make_setup  # noqa: E402
+SERVE_SEQ = 256  # one request = a seq-256 chunk (benchmarks.common.SERVE_SEQ)
 
 
 def main():
@@ -30,22 +26,23 @@ def main():
                     help="small solver knobs (CI smoke run) + MILP cross-check")
     args = ap.parse_args()
 
-    cluster = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
-    if args.quick:
-        profiles, tables = make_setup([args.arch], cluster,
-                                      slo_scale=args.slo_scale,
-                                      batch_sizes=(1, 4), vfracs=(1, 2))
-        objective = Objective(max_partitions=2, time_limit_s=30.0)
-    else:
-        profiles, tables = make_setup([args.arch], cluster,
-                                      slo_scale=args.slo_scale)
-        objective = Objective()
-    prof = profiles[args.arch]
+    cfg = ServeConfig(
+        cluster=ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12}),
+        models=(ModelSpec(arch=args.arch, slo_scale=args.slo_scale,
+                          seq_len=SERVE_SEQ, n_blocks=10),),
+        objective=(Objective(max_partitions=2, time_limit_s=30.0)
+                   if args.quick else Objective()),
+        vfracs=(1, 2) if args.quick else (1, 2, 4),
+        batch_sizes=(1, 4) if args.quick else (1, 2, 4, 8),
+    )
+    session = Session.from_config(cfg)
+    store = session.profile()
+    prof = store.profiles[args.arch]
     print(f"arch={args.arch}  SLO={prof.slo_s*1e3:.2f} ms  "
-          f"blocks={prof.n_blocks}  cluster={cluster.counts}")
+          f"blocks={prof.n_blocks}  cluster={cfg.cluster.counts}")
 
     # per-block cross-class latency ratio (the paper Fig. 3 diversity)
-    tbl = tables[args.arch]
+    tbl = store.analytic_table(args.arch)
     print("\nblock latency ratios lo/hi (batch 1):")
     for b in prof.blocks:
         r = tbl.lat[(b.index, "tpu-lo", 1, 1)] / tbl.lat[(b.index, "tpu-hi", 1, 1)]
@@ -56,10 +53,9 @@ def main():
     plans = {}
     backends = ("enumerate", "np", "dart-r") + (("milp",) if args.quick else ())
     for backend in backends:
-        planner = Planner(backend=backend, objective=objective)
-        plan = planner.plan(profiles, tables, cluster)
+        plan = session.solve(backend=backend)
         plans[backend] = plan
-        print(f"\n== {backend} (via Planner facade) ==")
+        print(f"\n== {backend} (via Session.solve) ==")
         print(plan.summary())
 
     if args.quick:

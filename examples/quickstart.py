@@ -1,57 +1,57 @@
 """Quickstart: plan a heterogeneous TPU cluster with PPipe and simulate it.
 
     PYTHONPATH=src python examples/quickstart.py
+    # or, after `pip install -e .`, simply: python examples/quickstart.py
 
-Walks the whole pipeline: analytical profiling -> pre-partitioning ->
-MILP planning -> reservation-based data plane simulation, and prints the
-paper's headline comparison (PPipe vs NP) on a 16-chip cluster.
+The whole pipeline through the public facade (`repro.api`): a declarative
+`ServeConfig` -> `Session` lifecycle — profile (analytical roofline +
+pre-partitioning) -> plan (MILP control plane -> pooled pipelines) ->
+deploy (reservation-driven data plane, simulated) -> run -> report — and
+the paper's headline comparison (PPipe vs the No-Partitioning baseline) on
+a 16-chip cluster, each baseline just one more `session.solve(backend=...)`.
 """
 
-import sys
-
-sys.path.insert(0, "src")
-
-from repro.configs import get_config
-from repro.core import blocks, costmodel as cm
-from repro.core import plan_cluster, plan_np
-from repro.core.runtime import build_runtime
-from repro.core.simulator import run_simulation
-from repro.core.types import ClusterSpec, replace
+from repro.api import ClusterSpec, ModelSpec, ServeConfig, Session
 from repro.data.requests import poisson_trace
-from repro.models.model_zoo import layer_costs
 
 
 def main():
-    # 1) a heterogeneous cluster: 4 high-class + 12 low-class chips
-    cluster = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
+    # 1) declare the deployment: a 4 high-class + 12 low-class chip cluster
+    #    serving stablelm-3b, SLO = 5x fastest batch-1 latency (paper 7.1)
+    cfg = ServeConfig(
+        cluster=ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12}),
+        models=(ModelSpec(arch="stablelm-3b", slo_scale=5.0, seq_len=256,
+                          n_blocks=10),),
+    )
 
-    # 2) profile stablelm-3b analytically and group layers into 10 blocks
-    cfg = get_config("stablelm-3b")
-    costs = layer_costs(cfg, seq=256)
-    prof = blocks.build_profile(cfg.name, costs, slo_s=1.0, n_blocks=10)
-    fastest = cluster.accel("tpu-hi")
-    base = sum(cm.block_latency(b, fastest) for b in prof.blocks)
-    prof = replace(prof, slo_s=5 * base)  # SLO = 5x fastest latency (paper 7.1)
-    print(f"model={cfg.name}  blocks={prof.n_blocks}  SLO={prof.slo_s*1e3:.1f} ms")
+    with Session.from_config(cfg) as session:
+        # 2) profile: analytic layer costs -> 10 pre-partitioned blocks
+        store = session.profile()
+        prof = store.profiles["stablelm-3b"]
+        print(f"model=stablelm-3b  blocks={prof.n_blocks}  "
+              f"SLO={prof.slo_s*1e3:.1f} ms")
 
-    # 3) control plane: MILP -> pooled pipelines
-    tbl = cm.build_latency_table(prof, cluster)
-    res = plan_cluster({cfg.name: prof}, {cfg.name: tbl}, cluster)
-    print("\n== PPipe plan ==")
-    print(res.plan.summary())
+        # 3) control plane: MILP -> pooled pipelines (+ the NP baseline via
+        #    the same facade)
+        plan = session.plan()
+        print("\n== PPipe plan ==")
+        print(plan.summary())
 
-    npres = plan_np({cfg.name: prof}, {cfg.name: tbl}, cluster)
-    print(f"\nNP baseline throughput: {npres.plan.throughput:.0f} rps "
-          f"(PPipe: {res.plan.throughput:.0f} rps, "
-          f"+{100*(res.plan.throughput/max(npres.plan.throughput,1e-9)-1):.1f}%)")
+        np_plan = session.solve(backend="np")
+        print(f"\nNP baseline throughput: {np_plan.throughput:.0f} rps "
+              f"(PPipe: {plan.throughput:.0f} rps, "
+              f"+{100*(plan.throughput/max(np_plan.throughput,1e-9)-1):.1f}%)")
 
-    # 4) data plane: simulate Poisson arrivals at 90% of planned capacity
-    trace = poisson_trace(res.plan.throughput * 0.9, 10.0, prof.slo_s, cfg.name)
-    sim = run_simulation(build_runtime(res.plan, {cfg.name: prof}), trace)
-    print(f"\nsimulated {len(trace)} requests @0.9 load: "
-          f"attainment={sim.attainment:.3f}  "
-          f"utilization={ {k: round(v, 2) for k, v in sim.utilization.items()} }  "
-          f"probes/dispatch={sim.probes_per_dispatch:.1f}")
+        # 4) data plane: simulate Poisson arrivals at 90% of planned capacity
+        session.deploy(mode="sim")
+        trace = poisson_trace(plan.throughput * 0.9, 10.0, prof.slo_s,
+                              "stablelm-3b")
+        report = session.run(trace)
+        tel = report.telemetry
+        print(f"\nsimulated {len(trace)} requests @0.9 load: "
+              f"attainment={report.attainment:.3f}  "
+              f"utilization={ {k: round(v, 2) for k, v in report.utilization.items()} }  "
+              f"probes/dispatch={tel.probes_per_dispatch:.1f}")
 
 
 if __name__ == "__main__":

@@ -1,27 +1,32 @@
-"""End-to-end pooled-pipeline serving through the repro.dataplane subsystem.
+"""End-to-end pooled-pipeline serving through the public `repro.api` facade.
 
     PYTHONPATH=src python examples/serve_pipeline.py [--quick]
+    # or, after `pip install -e .`: python examples/serve_pipeline.py
 
-The full PPipe flow on one host, in three acts:
+The full PPipe flow on one host — one declarative `ServeConfig`, one
+`Session` lifecycle per deployment (profile -> plan -> deploy -> submit/run
+-> swap -> report), no hand-wired executors/dispatchers anywhere — in four
+acts:
 
-1/2. cost-model profile -> MILP control plane -> ClusterRuntime -> real jitted
-   stage executors -> the asynchronous DataPlane serving a Poisson and a
-   bursty trace with SLO-aware admission, reservation-driven adaptive
-   batching (Algorithm 1) and overlapped pool dispatch.  Reports SLO
-   attainment, goodput, per-class utilization and queue delays.
+1/2. cost-model profile -> MILP control plane -> `deploy(mode="real")`
+   (jitted stage executors + overlapped pool dispatch, built by the
+   session) serving a Poisson and a bursty trace with SLO-aware admission
+   and reservation-driven adaptive batching (Algorithm 1).  Per-workload
+   SLO attainment and latency come straight off the `RequestHandle`s.
 
 3. a 2-stage pooled pipeline (low-class pool feeding a high-class pool,
-   boundary activations quantized between partitions) served in *measured*
-   mode: stage latencies are first calibrated from real execution so the
-   scheduler's virtual clock is the wall clock, then the feedback-correction
-   loop keeps the reservation tables in sync with measured stage times.
+   boundary activations quantized between partitions) pinned via
+   `session.use_plan` and served in *measured* mode: the session calibrates
+   stage latencies from real execution at deploy, so the scheduler's
+   virtual clock is the wall clock, and the feedback-correction loop keeps
+   the reservation tables in sync.
 
 4. a live plan hot-swap on the real execution path: mid-trace,
-   `DataPlane.swap_plan` installs a fresh runtime through a
-   `dispatcher_factory` that rebuilds the PoolDispatcher over the SAME
-   compiled stage executors (identical block ranges recompile nothing),
-   in-flight batches drain on the retired epoch, and the epoch is
-   garbage-collected the moment its last batch completes.
+   `session.swap(plan)` installs a fresh runtime — the session auto-builds
+   the dispatcher from its executor cache (identical block ranges, so
+   nothing recompiles and `SwapRecord.new_ranges` is empty), in-flight
+   batches drain on the retired epoch, and the epoch is garbage-collected
+   the moment its last batch completes.
 
 At reduced-model scale the MILP prefers single-partition pooled pipelines —
 µs-scale stages cannot amortize the fixed connection overhead of a feature-
@@ -30,62 +35,43 @@ which is why act 3 pins the partitioning explicitly.
 """
 
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
-
-import jax
-
-from repro.configs import get_config
-from repro.core import blocks, costmodel as cm
-from repro.core import plan_cluster
+from repro.api import ClusterSpec, ModelSpec, ServeConfig, Session
+from repro.core import costmodel as cm
 from repro.core.plan import ClusterPlan, PipelinePlan, StagePlan
-from repro.core.runtime import build_runtime
-from repro.core.types import ClusterSpec, replace
 from repro.data.requests import bursty_trace, describe, poisson_trace
-from repro.dataplane import (
-    DataPlane,
-    PoolDispatcher,
-    build_executors,
-    calibrate_runtime,
-)
-from repro.models.model_zoo import layer_costs
-from repro.serving.engine import layer_block_map_from_profile
 
 SEQ = 32
+REDUCED = dict(n_layers=8, d_model=256, d_ff=512, n_heads=4, kv_heads=4,
+               vocab=2048)
 
 
-def make_setup():
-    cfg = get_config("stablelm-3b").reduced(n_layers=8, d_model=256, d_ff=512,
-                                            n_heads=4, kv_heads=4, vocab=2048)
-    cluster = ClusterSpec(counts={"tpu-hi": 1, "tpu-lo": 8})
-    costs = layer_costs(cfg, SEQ)
-    prof0 = blocks.build_profile(cfg.name, costs, slo_s=1.0, n_blocks=6,
-                                 accel=cluster.accel("tpu-hi"))
-    base = sum(cm.block_latency(b, cluster.accel("tpu-hi"), 1, 1)
-               for b in prof0.blocks)
-    prof = replace(prof0, slo_s=base * 3.0)
-    return cfg, cluster, prof
+def base_config(feedback: str = "planned", slo_scale: float = 3.0
+                ) -> ServeConfig:
+    return ServeConfig(
+        cluster=ClusterSpec(counts={"tpu-hi": 1, "tpu-lo": 8}),
+        models=(ModelSpec(arch="stablelm-3b", reduced=REDUCED, n_blocks=6,
+                          seq_len=SEQ, slo_scale=slo_scale),),
+        feedback=feedback,
+        serve_seq_len=SEQ,
+    )
 
 
-def milp_plan(cfg, cluster, prof):
-    tbl = cm.build_latency_table(prof, cluster)
-    res = plan_cluster({cfg.name: prof}, {cfg.name: tbl}, cluster,
-                       slo_margin=0.4)
-    return res.plan
-
-
-def staged_plan(cfg, cluster, prof):
+def staged_plan(session: Session, bs: int = 4, cut: int = 3) -> ClusterPlan:
     """Hand-pinned 2-stage pooled pipeline: 3-member low-class pool for the
     early blocks, the high-class chip for the rest (act 3)."""
-    tbl = cm.build_latency_table(prof, cluster)
-    bs, cut, n = 4, 3, prof.n_blocks
+    prof = session.store.profiles["stablelm-3b"]
+    tbl = session.store.analytic_table("stablelm-3b")
+    cluster = session.config.cluster
+    n = prof.n_blocks
     pipeline = PipelinePlan(
-        model_name=cfg.name, batch_size=bs,
+        model_name="stablelm-3b", batch_size=bs,
         stages=(
-            StagePlan(0, cut, "tpu-lo", 1, 3, tbl.partition(0, cut, "tpu-lo", 1, bs)),
-            StagePlan(cut, n, "tpu-hi", 1, 1, tbl.partition(cut, n, "tpu-hi", 1, bs)),
+            StagePlan(0, cut, "tpu-lo", 1, 3,
+                      tbl.partition(0, cut, "tpu-lo", 1, bs)),
+            StagePlan(cut, n, "tpu-hi", 1, 1,
+                      tbl.partition(cut, n, "tpu-hi", 1, bs)),
         ),
         xfer_latency_s=(cm.transfer_latency(prof, cluster, "tpu-lo", "tpu-hi",
                                             cut, bs),),
@@ -93,57 +79,60 @@ def staged_plan(cfg, cluster, prof):
     return ClusterPlan(cluster=cluster, pipelines=[pipeline])
 
 
-def serve_workload(name, trace, plan, prof, cfg, executors, feedback="planned",
-                   runtime=None):
-    runtime = runtime or build_runtime(plan, {cfg.name: prof})
-    dispatcher = PoolDispatcher.from_runtime(runtime, executors, max_inflight=4)
-    dp = DataPlane(runtime, dispatcher=dispatcher, feedback=feedback,
-                   seq_len=SEQ)
+def serve_workload(session: Session, name: str, trace) -> None:
+    """Submit a trace, drain it, and report per-workload stats from the
+    request handles.  One workload per session: a session serves one
+    monotonic virtual clock, so independent traces (each starting at t=0)
+    replay on fresh deployments — exactly what drain() enforces."""
+    handles = [session.submit(r) for r in trace]
     t0 = time.perf_counter()
-    tel = dp.serve(trace)
+    session.drain()
     wall = time.perf_counter() - t0
+    ok = sum(h.ok for h in handles)
+    served = sum(h.latency_s is not None for h in handles)
+    lats = sorted(h.latency_s for h in handles if h.latency_s is not None)
     st = describe(trace)
+    p50 = lats[len(lats) // 2] * 1e3 if lats else 0.0
     print(f"\n[{name}] {st.n} reqs, mean {st.mean_rps:.0f} rps "
           f"(peak {st.peak_rps:.0f}), interarrival CV {st.cv_interarrival:.2f}, "
           f"SLO {st.slo_s*1e3:.3f} ms  ({wall:.2f}s wall)")
-    print("  " + tel.summary())
-    return tel
+    print(f"  served {served}/{len(trace)} "
+          f"(attainment {ok/len(trace):.1%}), latency p50 {p50:.3f} ms")
+    assert all(h.done for h in handles)  # every handle resolved by drain()
 
 
-def live_swap_demo(cfg, prof, plan, executors, n_req):
-    """Act 4: zero-downtime plan refresh on real execution.  The swap builds
-    a new runtime + dispatcher mid-trace (the dispatcher_factory reuses the
-    already-compiled executors — identical block ranges, nothing to
-    recompile), old batches drain on the retired epoch, GC reclaims it."""
-    runtime = build_runtime(plan, {cfg.name: prof})
-    dispatcher = PoolDispatcher.from_runtime(runtime, executors, max_inflight=4)
-    dp = DataPlane(runtime, dispatcher=dispatcher, seq_len=SEQ)
-    rate = plan.throughput * 0.5
-    trace = poisson_trace(rate, n_req / rate, prof.slo_s, cfg.name, seed=13)
-    mid = trace[len(trace) // 2].arrival_s
-    state = {}
+def live_swap_demo(n_req: int) -> None:
+    """Act 4: zero-downtime plan refresh on real execution, on a fresh
+    deployment.  `session.swap` rebuilds runtime + dispatcher mid-trace from
+    the session's executor cache (identical block ranges -> zero
+    recompilation), old batches drain on the retired epoch, GC reclaims it."""
+    with Session.from_config(base_config()) as session:
+        plan = session.plan()
+        session.deploy(mode="real")
+        prof = session.store.profiles["stablelm-3b"]
+        rate = plan.throughput * 0.5
+        trace = poisson_trace(rate, n_req / rate, prof.slo_s, "stablelm-3b",
+                              seed=13)
+        mid = trace[len(trace) // 2].arrival_s
+        state = {}
 
-    def factory(new_rt):
-        return PoolDispatcher.from_runtime(new_rt, executors, max_inflight=4)
+        def hook(req, t):
+            if not state and t > mid:
+                state["inflight"] = len(session.dataplane.jobs)
+                state["rec"] = session.swap(plan, now=t, reason="live refresh")
 
-    def hook(req, t):
-        if not state and t > mid:
-            state["inflight"] = len(dp.jobs)
-            t0 = time.perf_counter()
-            dp.swap_plan(plan, {cfg.name: prof}, now=t,
-                         dispatcher_factory=factory, reason="live refresh")
-            state["swap_wall_s"] = time.perf_counter() - t0
-
-    dp.arrival_hooks.append(hook)
-    tel = dp.serve(trace)
-    assert len(tel.outcomes) == len(trace)
-    assert tel.plan_swaps == 1 and tel.epochs_gcd == 1
-    print(f"\n[live swap] {len(trace)} reqs; swap with "
-          f"{state['inflight']} batch(es) in flight took "
-          f"{state['swap_wall_s']*1e3:.1f} ms wall, virtual transient "
-          f"{tel.swap_transient_s[0]*1e3:.3f} ms; retired epoch GC'd "
-          f"({tel.epochs_gcd}/{tel.plan_swaps})")
-    print("  " + tel.summary())
+        session.on_arrival(hook)
+        serve_workload(session, "live swap", trace)
+        tel = session.telemetry
+        rec = state["rec"]
+        assert tel.plan_swaps == 1 and tel.epochs_gcd == 1
+        assert rec.new_ranges == ()  # same partitioning: everything reused
+        print(f"  swap with {state['inflight']} batch(es) in flight took "
+              f"{rec.swap_wall_s*1e3:.1f} ms wall "
+              f"(compile {rec.compile_wall_s*1e3:.2f} ms, "
+              f"{rec.reused_executors} executor(s) reused), virtual transient "
+              f"{tel.swap_transient_s[-1]*1e3:.3f} ms; retired epoch GC'd "
+              f"({tel.epochs_gcd}/{tel.plan_swaps})")
 
 
 def main():
@@ -152,43 +141,48 @@ def main():
                     help="smaller traces (CI smoke run)")
     args = ap.parse_args()
     n_req = 32 if args.quick else 96
-    key = jax.random.PRNGKey(0)
-
-    cfg, cluster, prof = make_setup()
-    lbm = layer_block_map_from_profile(prof, cfg.n_layers)
 
     # ---- acts 1/2: MILP plan, planned feedback, Poisson + bursty ----------
-    plan = milp_plan(cfg, cluster, prof)
-    print(plan.summary())
-    executors = build_executors(cfg, plan, lbm, key)
-    rate = plan.throughput * 0.6
-    for name, gen in (("poisson", poisson_trace), ("bursty", bursty_trace)):
-        trace = gen(rate, n_req / rate, prof.slo_s, cfg.name, seed=7)
-        tel = serve_workload(name, trace, plan, prof, cfg, executors)
-        assert len(tel.outcomes) == len(trace)
+    # one session per workload: both traces start at t=0, and a session
+    # serves one monotonic virtual clock (drain() enforces it)
+    for i, (name, gen) in enumerate((("poisson", poisson_trace),
+                                     ("bursty", bursty_trace))):
+        with Session.from_config(base_config()) as session:
+            plan = session.plan()
+            if i == 0:
+                print(plan.summary())
+            session.deploy(mode="real")
+            prof = session.store.profiles["stablelm-3b"]
+            rate = plan.throughput * 0.6
+            trace = gen(rate, n_req / rate, prof.slo_s, "stablelm-3b", seed=7)
+            serve_workload(session, name, trace)
 
     # ---- act 3: pinned 2-stage pipeline, measured (calibrated) feedback ---
-    plan2 = staged_plan(cfg, cluster, prof)
-    print("\n" + plan2.summary())
-    executors2 = build_executors(cfg, plan2, lbm, key)
-    runtime = build_runtime(plan2, {cfg.name: prof})
-    calibrate_runtime(runtime, executors2, SEQ)
-    p0 = runtime.pipelines[0]
-    e2e = sum(s.latency(1) for s in p0.stages)
-    thr = min(len(s.vdevs) * p0.unified_batch / s.latency(p0.unified_batch)
-              for s in p0.stages)
-    print(f"calibrated: e2e batch-1 latency {e2e*1e3:.1f} ms, "
-          f"measured pipeline throughput ~{thr:.0f} rps")
-    rate = thr * 0.5
-    n_meas = max(24, n_req // 3)
-    trace = bursty_trace(rate, n_meas / rate, e2e * 6, cfg.name, seed=11)
-    # serve on the SAME calibrated runtime the printed numbers describe
-    tel = serve_workload("bursty/measured 2-stage", trace, plan2, prof, cfg,
-                         executors2, feedback="measured", runtime=runtime)
-    assert len(tel.outcomes) == len(trace)
+    # generous analytic SLO: the hand-pinned 2-stage plan must pass
+    # use_plan's validate (the MILP would not partition at this scale); the
+    # act's trace SLO comes from the *calibrated* latency, not the profile
+    with Session.from_config(base_config(feedback="measured",
+                                         slo_scale=8.0)) as session:
+        session.profile()
+        plan2 = staged_plan(session)
+        print("\n" + plan2.summary())
+        session.use_plan(plan2)
+        session.deploy(mode="real")  # calibrates: virtual clock == wall clock
+        p0 = session.runtime.pipelines[0]
+        e2e = sum(s.latency(1) for s in p0.stages)
+        thr = min(len(s.vdevs) * p0.unified_batch / s.latency(p0.unified_batch)
+                  for s in p0.stages)
+        print(f"calibrated: e2e batch-1 latency {e2e*1e3:.1f} ms, "
+              f"measured pipeline throughput ~{thr:.0f} rps")
+        rate = thr * 0.5
+        n_meas = max(24, n_req // 3)
+        trace = bursty_trace(rate, n_meas / rate, e2e * 6, "stablelm-3b",
+                             seed=11)
+        serve_workload(session, "bursty/measured 2-stage", trace)
+        print("  " + session.report().summary())
 
-    # ---- act 4: live plan hot-swap with a real dispatcher_factory ---------
-    live_swap_demo(cfg, prof, plan, executors, n_req)
+    # ---- act 4: live plan hot-swap through the facade ---------------------
+    live_swap_demo(n_req)
 
 
 if __name__ == "__main__":

@@ -44,16 +44,32 @@ if TYPE_CHECKING:  # avoid importing jax via repro.dataplane at module load
 
 @dataclass(frozen=True)
 class ReplanConfig:
-    """Cadence and sensitivity of the slow control loop."""
+    """Cadence of the slow control loop.
+
+    Deliberately carries NO drift-sensitivity knobs (ROADMAP "adaptive
+    drift thresholds", closed): tripping is hair-trigger by design — the
+    internal `_RATE_TRIP`/`_MIX_TRIP` floors exist only to filter
+    estimation noise — because the accept/reject decision belongs to the
+    `ReplanPolicy` cost/benefit gate, not to static thresholds an operator
+    would have to re-tune per workload.  An ungated loop (policy=None)
+    therefore re-solves on every noticeable shift: that is the
+    always-replan upper bound the benchmarks compare the gate against.
+    """
 
     window_s: float = 2.0  # sliding estimation window (virtual seconds)
     check_interval_s: float = 0.5  # min spacing between drift checks
     min_requests: int = 16  # don't estimate from thin air
-    rate_drift: float = 0.5  # relative total-rate change that triggers
-    mix_drift: float = 0.2  # total-variation distance of the model mix
     source: str = "analytic"  # which ProfileStore tables price the re-solve
     max_swaps: int | None = None  # safety bound (None = unbounded)
     max_failures: int = 8  # disarm the loop after this many failed re-plans
+
+
+# Internal drift-trip floors: just above sliding-window estimation noise, far
+# below anything worth hand-tuning.  Tripping is cheap (consider() runs no
+# solver); the ReplanPolicy gate prices every trip, so these are NOT part of
+# the config surface — loosen/tighten here only if the estimators change.
+_RATE_TRIP = 0.2  # relative total-rate change that trips a check
+_MIX_TRIP = 0.1  # total-variation distance of the model mix that trips
 
 
 class DriftMonitor:
@@ -348,6 +364,12 @@ class ReplanLoop:
     config: ReplanConfig = field(default_factory=ReplanConfig)
     objective: Objective | None = None
     dispatcher_factory: object = None  # factory(new_runtime) -> PoolDispatcher
+    # setup(new_runtime) hook run by swap_plan BEFORE carried requests are
+    # re-admitted.  None = the source-based default (reprice_runtime when
+    # re-solves are priced from measured tables); a calibrated real
+    # deployment overrides this with its re-calibration closure
+    # (repro.api.Session wires that automatically)
+    runtime_setup: object = None
     # cost/benefit gate + hysteresis between drift and the solver; None keeps
     # the ungated re-solve-on-every-trip behaviour (benchmarks compare both)
     policy: ReplanPolicy | None = None
@@ -392,7 +414,7 @@ class ReplanLoop:
             return False
         rate_rel = abs(total - self._baseline_rate) / max(self._baseline_rate, 1e-9)
         mix_tv = mix_distance(self.monitor.mix(now), self._baseline_mix)
-        return rate_rel > self.config.rate_drift or mix_tv > self.config.mix_drift
+        return rate_rel > _RATE_TRIP or mix_tv > _MIX_TRIP
 
     def maybe_replan(self, now: float) -> ClusterPlan | None:
         """Drift check at the configured cadence; past the thresholds, the
@@ -437,9 +459,13 @@ class ReplanLoop:
         weights = {m: max(rates.get(m, 0.0), 1e-6) for m in profiles}
         # measured source: re-price the fresh runtime BEFORE any carried
         # request is re-admitted/scheduled, so probe()/reserve() agree with
-        # the solve from the first post-swap round
-        setup = (self.store.reprice_runtime
-                 if self.config.source == "measured" else None)
+        # the solve from the first post-swap round.  An explicit
+        # runtime_setup (e.g. a real deployment's re-calibration closure)
+        # supersedes the repricing default — calibration measures the same
+        # speeds repricing would only estimate.
+        setup = self.runtime_setup or (
+            self.store.reprice_runtime
+            if self.config.source == "measured" else None)
         try:
             plan = self.planner.plan(
                 profiles,

@@ -153,9 +153,13 @@ def multi_model_trace(
     gen = bursty_trace if bursty else poisson_trace
     out: list[Request] = []
     for i, (name, rate) in enumerate(sorted(rates.items())):
+        # fixed per-model id stride (NOT cumulative-count-based: that made
+        # strides trace-size dependent and collide with callers' segment
+        # offsets on paper-scale traces, silently aliasing outcomes that
+        # are attributed by req_id)
         out.extend(
             gen(rate, horizon_s, slos[name], model_name=name, seed=seed + 1000 * i,
-                start_id=len(out) * 10_000_000)
+                start_id=i * 1_000_000_000)
         )
     return sorted(out)
 

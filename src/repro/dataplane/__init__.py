@@ -8,7 +8,15 @@ Module layout (DESIGN.md section 3):
   plane.py      the event loop tying them together + plan->executor builders
                 + DataPlane.swap_plan, the drain-and-swap hand-off point for
                 online re-planning (repro.controlplane.ReplanLoop)
+
+The one-shot `serve_trace` helper is deprecated at this level: end-to-end
+flows go through `repro.api.Session` (DESIGN.md section 9), which owns the
+profile -> plan -> deploy -> run lifecycle this package is one layer of.
+The import keeps working through a PEP-562 shim (with a DeprecationWarning)
+so existing integrations migrate on their own schedule.
 """
+
+import warnings
 
 from .batcher import AdaptiveBatcher, unloaded_latency_s  # noqa: F401
 from .dispatcher import (  # noqa: F401
@@ -21,6 +29,27 @@ from .plane import (  # noqa: F401
     DataPlane,
     build_executors,
     calibrate_runtime,
-    serve_trace,
 )
 from .queues import AdmissionPolicy, ModelQueue, QueueSet  # noqa: F401
+
+
+def __getattr__(name: str):
+    if name == "serve_trace":
+        warnings.warn(
+            "repro.dataplane.serve_trace is deprecated; drive serving "
+            "through repro.api.Session (Session.run) — or import "
+            "repro.dataplane.plane.serve_trace when you really want the "
+            "bare one-shot helper",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from .plane import serve_trace
+
+        # no caching on purpose: like the repro.core.* shims, every access
+        # warns, so tests can assert the deprecation deterministically
+        return serve_trace
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | {"serve_trace"})

@@ -348,7 +348,7 @@ def test_failed_replan_keeps_cooldown_and_counts_failure_once():
     loop = ReplanLoop(
         planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
         config=ReplanConfig(window_s=1.0, check_interval_s=0.1,
-                            min_requests=4, mix_drift=0.3),
+                            min_requests=4),
         policy=policy,
     )
     rate = plan0.throughput  # observation rate at full planned capacity
@@ -421,7 +421,7 @@ def test_replan_loop_triggers_on_mix_drift_and_improves_fit():
     loop = ReplanLoop(
         planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
         config=ReplanConfig(window_s=0.4, check_interval_s=0.2,
-                            min_requests=8, mix_drift=0.3, max_swaps=2),
+                            min_requests=8, max_swaps=2),
     ).attach()
     loop.set_baseline({"m0": rate * 0.9, "m1": rate * 0.1})
     tel = dp.serve(trace)

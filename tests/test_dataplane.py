@@ -15,9 +15,9 @@ from repro.dataplane import (
     AdmissionPolicy,
     DataPlane,
     FeedbackController,
-    serve_trace,
 )
 from repro.dataplane.batcher import unloaded_latency_s
+from repro.dataplane.plane import serve_trace  # package-level alias is deprecated
 
 
 def _setup(slo=0.03, n_layers=8, counts=None, n_blocks=5):

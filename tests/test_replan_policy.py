@@ -190,7 +190,7 @@ def _run_loop(profs, store, planner, plan, trace, policy):
     loop = ReplanLoop(
         planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
         config=ReplanConfig(window_s=0.4, check_interval_s=0.2,
-                            min_requests=8, mix_drift=0.3),
+                            min_requests=8),
         policy=policy,
     ).attach()
     loop.set_baseline({m: plan.throughput_of(m) for m in profs})
@@ -219,6 +219,11 @@ def test_oscillating_mix_at_most_one_swap_per_cooldown_window():
     assert all(b - a >= cooldown - 1e-9 for a, b in zip(times, times[1:]))
     assert len(loop.events) <= horizon / cooldown + 1
     assert len(loop.events) < len(ungated.events)
+    # non-regression for the loosened (internal, hair-trigger) drift trips:
+    # trips got CHEAPER to fire when the rate/mix knobs left ReplanConfig,
+    # but gated swap counts on this oscillating trace must not grow — the
+    # cooldown/damper, not the trip thresholds, is what bounds swaps
+    assert tel.plan_swaps <= 5
     # rejected candidates surface in telemetry (accept/reject both recorded)
     rejected = [d for d in tel.replan_decisions if not d["accepted"]]
     assert rejected and any(d["reason"] == "cooldown" for d in rejected)
@@ -236,7 +241,7 @@ def test_marginal_rejection_holds_off_repricing_and_dedupes_decisions():
     loop = ReplanLoop(
         planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
         config=ReplanConfig(window_s=1.0, check_interval_s=0.1,
-                            min_requests=4, mix_drift=0.2),
+                            min_requests=4),
         policy=policy,
     )
     loop.set_baseline({m: plan.throughput_of(m) for m in profs})

@@ -74,6 +74,15 @@ def test_boundary_quantization_small_error():
     h2 = bq.dequantize(q, s, dtype=h.dtype)
     out_ref = np.asarray(stages[1](params, h), np.float32)
     out_q = np.asarray(stages[1](params, h2), np.float32)
-    # top-1 prediction unchanged for almost all positions
-    agree = (out_ref.argmax(-1) == out_q.argmax(-1)).mean()
-    assert agree > 0.95
+    # logits barely move...
+    err = np.abs(out_q - out_ref).max()
+    assert err < 0.4, f"int8 boundary round-trip moved logits by {err}"
+    # ...and the top-1 prediction is unchanged wherever the reference's
+    # top-2 margin exceeds that numeric perturbation (the same decisive-
+    # margin rule test_models uses: with a 24-position reduced model, one
+    # near-tie flip is bf16 noise, not quantization damage)
+    top2 = np.sort(out_ref, axis=-1)[..., -2:]
+    decisive = (top2[..., 1] - top2[..., 0]) > 2 * err
+    agree = out_ref.argmax(-1) == out_q.argmax(-1)
+    assert decisive.any(), "reduced model produced no decisive positions"
+    assert agree[decisive].all()
