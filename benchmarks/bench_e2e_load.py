@@ -55,6 +55,8 @@ else:
 HORIZON_S = 8.0
 
 BENCH_JSON = Path("BENCH_e2e.json")
+OBS_TRACE_JSON = Path("BENCH_obs_trace.json")
+OBS_WINDOWS_JSON = Path("BENCH_obs_windows.json")
 
 
 def _config(cluster, archs, **overrides) -> ServeConfig:
@@ -334,6 +336,101 @@ def run_oscillation(cluster_name="HC1-S", quick=False, seed=0, n_models=2):
     }
 
 
+def run_obs(cluster_name="HC1-S", quick=False, seed=0, reps=3):
+    """Observability cost + artifacts on the drift scenario (repro.obs).
+
+    Two measurements on the run_drift mix-flip trace, both through the
+    Session facade:
+
+    * **decision identity + artifacts** — the trace is served with replan
+      enabled at ``obs.level="off"`` (no Observer object; the hot path pays
+      a single ``is not None`` per hook site) and at ``"trace"`` (full
+      journal: request/batch/stage/xfer events, drift estimates, replan
+      verdicts, plan swaps).  The two outcome maps must be identical — the
+      observer only watches — and the traced run must contain a plan swap;
+      its Perfetto `trace_event` JSON + per-window series are exported.
+    * **overhead** — the same e2e serve (scheduler + drift detector + MILP
+      re-solves), alternating off/trace reps back-to-back and taking the
+      best wall of each so slow machine drift and solver-wall noise bias
+      neither side.  Reported as
+      ``1 - scheduled_rps(trace)/scheduled_rps(off)``; CI fails the run
+      when it exceeds ``--assert-obs-overhead``.  The observer itself only
+      pays one buffer append per event on the serving path (journal dicts
+      and window buckets materialize lazily at export, off the serve wall).
+    """
+    from repro.api import ObsConfig
+
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS["G1"][:2]
+    base_cfg = _config(cluster, archs)
+    s0 = Session.from_config(base_cfg)
+    store = s0.profile()
+    mix_a, mix_b = _mix_pair(archs, [0.85, 0.15])
+    plan0 = s0.solve(objective=Objective(slo_margin=0.4).with_weights(mix_a))
+    rate = plan0.throughput * 0.8
+    slos = {m: store.profiles[m].slo_s for m in archs}
+    half = 2.0 if quick else 4.0
+    rates_a = {m: rate * mix_a[m] for m in archs}
+    rates_b = {m: rate * mix_b[m] for m in archs}
+    trace = _segmented_mix_trace([rates_a, rates_b], half, slos, seed=seed)
+
+    def serve(level, replan):
+        cfg = dataclasses.replace(
+            base_cfg,
+            replan=ReplanConfig(window_s=0.5, check_interval_s=0.25,
+                                min_requests=12, max_swaps=2),
+            obs=ObsConfig(level=level, window_s=0.5),
+        )
+        session = Session.from_config(cfg, store=store)
+        session.use_plan(plan0)
+        session.deploy(mode="sim")
+        if replan:
+            session.enable_replanning(baseline_rates=rates_a)
+        t0 = time.perf_counter()
+        report = session.run(trace)
+        return report, time.perf_counter() - t0
+
+    # decision identity + trace artifacts + overhead, all on the same
+    # replan-enabled e2e serve; off/trace reps interleaved, best-of-each
+    rep_off = rep_trace = None
+    wall_off = wall_trace = float("inf")
+    for _ in range(reps):
+        rep_off, w = serve("off", replan=True)
+        wall_off = min(wall_off, w)
+        rep_trace, w = serve("trace", replan=True)
+        wall_trace = min(wall_trace, w)
+    out_off = {o.req_id: o.completion_s for o in rep_off.telemetry.outcomes}
+    out_trc = {o.req_id: o.completion_s for o in rep_trace.telemetry.outcomes}
+    assert out_off == out_trc, "observer must not change serving decisions"
+    assert rep_trace.plan_swaps >= 1, "scenario must exercise a plan swap"
+    thr_off = len(trace) / wall_off
+    thr_trace = len(trace) / wall_trace
+    overhead = (thr_off - thr_trace) / thr_off
+
+    rep_trace.export_trace(OBS_TRACE_JSON)
+    ts = rep_trace.timeseries()
+    OBS_WINDOWS_JSON.write_text(json.dumps(ts, indent=2))
+    journal = rep_trace.obs.journal
+    return {
+        "cluster": cluster_name,
+        "models": archs,
+        "n_requests": len(trace),
+        "horizon_s": 2 * half,
+        "plan_swaps": rep_trace.plan_swaps,
+        "attainment": rep_trace.attainment,
+        "wall_off_s": wall_off,
+        "wall_trace_s": wall_trace,
+        "scheduled_rps_off": thr_off,
+        "scheduled_rps_trace": thr_trace,
+        "traced_overhead": overhead,
+        "journal_events": len(journal),
+        "journal_kinds": sorted({e["kind"] for e in journal.events}),
+        "trace_artifact": str(OBS_TRACE_JSON),
+        "windows_artifact": str(OBS_WINDOWS_JSON),
+        "timeseries": ts,
+    }
+
+
 def run_swap_measured(quick=False):
     """Measured-mode live plan swap to a DIFFERENT partitioning on the REAL
     execution path (closes the long-standing ROADMAP item 1): a calibrated
@@ -458,6 +555,16 @@ def run_swap_measured(quick=False):
     }
 
 
+def _obs_line(obs):
+    return (
+        f"e2e_obs[{obs['cluster']}|{'+'.join(obs['models'])}],"
+        f"{(obs['wall_off_s'] + obs['wall_trace_s'])*1e6:.0f},"
+        f"traced_overhead={100*obs['traced_overhead']:.1f}%;"
+        f"events={obs['journal_events']};swaps={obs['plan_swaps']};"
+        f"wrote={obs['trace_artifact']}+{obs['windows_artifact']}"
+    )
+
+
 def main(quick=False, full=False):
     out = []
     results = []
@@ -509,8 +616,11 @@ def main(quick=False, full=False):
         f"gated_attain={osc['gated']['attainment']:.3f};"
         f"delta_vs_ungated={osc['delta_attainment_vs_ungated']:+.3f}"
     )
+    obs = run_obs(quick=quick)
+    out.append(_obs_line(obs))
     payload = {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
-               "rows": results, "drift": drift, "oscillation": osc}
+               "rows": results, "drift": drift, "oscillation": osc,
+               "obs": obs}
     if full:
         # paper-scale (100-device, 3-model) re-planning scenarios — gated
         # behind --full because they replay ~100k-request traces; affordable
@@ -558,6 +668,27 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="run only the observability scenario (writes the "
+                         "Perfetto/windows artifacts, leaves BENCH_e2e.json "
+                         "untouched)")
+    ap.add_argument("--assert-obs-overhead", type=float, default=None,
+                    metavar="FRAC",
+                    help="exit non-zero if traced-mode overhead exceeds this "
+                         "fraction of untraced scheduled-req/s (CI guard)")
     args = ap.parse_args()
-    for line in main(quick=args.quick, full=args.full):
-        print(line)
+    if args.obs_only:
+        obs_result = run_obs(quick=args.quick)
+        print(_obs_line(obs_result))
+    else:
+        for line in main(quick=args.quick, full=args.full):
+            print(line)
+        obs_result = json.loads(BENCH_JSON.read_text())["obs"]
+    if args.assert_obs_overhead is not None:
+        ov = obs_result["traced_overhead"]
+        if ov > args.assert_obs_overhead:
+            print(f"FAIL: traced-mode overhead {ov:.1%} exceeds the "
+                  f"{args.assert_obs_overhead:.1%} budget", file=sys.stderr)
+            sys.exit(1)
+        print(f"obs overhead check ok: {ov:.1%} <= "
+              f"{args.assert_obs_overhead:.1%}")

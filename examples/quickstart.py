@@ -11,17 +11,19 @@ the paper's headline comparison (PPipe vs the No-Partitioning baseline) on
 a 16-chip cluster, each baseline just one more `session.solve(backend=...)`.
 """
 
-from repro.api import ClusterSpec, ModelSpec, ServeConfig, Session
+from repro.api import ClusterSpec, ModelSpec, ObsConfig, ServeConfig, Session
 from repro.data.requests import poisson_trace
 
 
 def main():
     # 1) declare the deployment: a 4 high-class + 12 low-class chip cluster
-    #    serving stablelm-3b, SLO = 5x fastest batch-1 latency (paper 7.1)
+    #    serving stablelm-3b, SLO = 5x fastest batch-1 latency (paper 7.1);
+    #    obs.level="aggregate" adds rolling-window metrics to the report
     cfg = ServeConfig(
         cluster=ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12}),
         models=(ModelSpec(arch="stablelm-3b", slo_scale=5.0, seq_len=256,
                           n_blocks=10),),
+        obs=ObsConfig(level="aggregate", window_s=1.0),
     )
 
     with Session.from_config(cfg) as session:
@@ -52,6 +54,15 @@ def main():
               f"attainment={report.attainment:.3f}  "
               f"utilization={ {k: round(v, 2) for k, v in report.utilization.items()} }  "
               f"probes/dispatch={tel.probes_per_dispatch:.1f}")
+
+        # 5) observability: the per-window rollup behind the aggregates
+        ts = report.timeseries()
+        print(f"\nper-{ts['window_s']:.0f}s windows:")
+        for i in range(ts["n_windows"]):
+            att = ts["attainment"][i]
+            print(f"  t={ts['t_s'][i]:4.0f}s  arrivals={ts['arrivals'][i]:4d}  "
+                  f"goodput={ts['goodput_rps'][i]:7.1f} rps  "
+                  f"attainment={'-' if att is None else f'{att:.3f}'}")
 
 
 if __name__ == "__main__":

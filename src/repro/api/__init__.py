@@ -29,6 +29,7 @@ from repro.controlplane.planner import Objective  # noqa: F401
 from repro.controlplane.replan import PolicyConfig, ReplanConfig  # noqa: F401
 from repro.core.types import ClusterSpec  # noqa: F401
 from repro.dataplane.queues import AdmissionPolicy  # noqa: F401
+from repro.obs import ObsConfig  # noqa: F401
 
 from .config import ConfigError, ModelSpec, ServeConfig  # noqa: F401
 from .session import (  # noqa: F401
@@ -61,4 +62,5 @@ __all__ = [
     "ReplanConfig",
     "PolicyConfig",
     "AdmissionPolicy",
+    "ObsConfig",
 ]

@@ -25,6 +25,7 @@ from repro.controlplane.replan import PolicyConfig, ReplanConfig
 from repro.core import costmodel as cm
 from repro.core.types import ACCEL_CLASSES, ClusterSpec
 from repro.dataplane.queues import AdmissionPolicy
+from repro.obs import ObsConfig
 
 
 class ConfigError(ValueError):
@@ -103,6 +104,9 @@ class ServeConfig:
     replan: ReplanConfig = field(default_factory=ReplanConfig)
     replan_policy: PolicyConfig | None = None
     gc_interval_s: float = 1.0
+    # observability (repro.obs): level off|aggregate|trace, rolling-window
+    # width, span sampling rate — off means no Observer is created at all
+    obs: ObsConfig = field(default_factory=ObsConfig)
     # latency-table axes (ProfileStore): defaults are the paper's grids
     vfracs: tuple[int, ...] = cm.VFRACS
     batch_sizes: tuple[int, ...] = cm.BATCH_SIZES
@@ -151,6 +155,13 @@ class ServeConfig:
         if self.gc_interval_s <= 0:
             raise ConfigError(
                 f"gc_interval_s must be > 0, got {self.gc_interval_s}")
+        if not isinstance(self.obs, ObsConfig):
+            raise ConfigError("obs must be an ObsConfig, got "
+                              f"{type(self.obs).__name__}")
+        try:
+            self.obs.validate()
+        except ValueError as exc:
+            raise ConfigError(str(exc)) from exc
         if not self.vfracs or any(v < 1 for v in self.vfracs):
             raise ConfigError(f"invalid vfracs {self.vfracs!r}")
         if not self.batch_sizes or any(b < 1 for b in self.batch_sizes):
@@ -190,6 +201,8 @@ class ServeConfig:
         d.pop("token_fn", None)
         admission = d.pop("admission", None)
         replan_policy = d.pop("replan_policy", None)
+        # optional for backward compat with pre-obs configs (defaults = off)
+        obs = d.pop("obs", None)
         try:
             cfg = cls(
                 cluster=ClusterSpec(**d.pop("cluster")),
@@ -200,6 +213,7 @@ class ServeConfig:
                 replan=ReplanConfig(**d.pop("replan")),
                 replan_policy=(PolicyConfig(**replan_policy)
                                if replan_policy is not None else None),
+                obs=(ObsConfig(**obs) if obs is not None else ObsConfig()),
                 vfracs=tuple(d.pop("vfracs")),
                 batch_sizes=tuple(d.pop("batch_sizes")),
                 token_fn=token_fn,

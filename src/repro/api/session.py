@@ -47,6 +47,7 @@ from repro.core.runtime import ClusterRuntime, build_runtime
 from repro.core.types import ClusterSpec, ModelProfile, Request, RequestOutcome, replace
 from repro.dataplane.metrics import Telemetry
 from repro.dataplane.plane import DataPlane
+from repro.obs import Observer
 
 from .config import ConfigError, ModelSpec, ServeConfig
 
@@ -174,10 +175,15 @@ class Report:
     path), the properties are the numbers every caller wants.  Swaps
     installed by an attached ReplanLoop do not produce SwapRecords (they
     bypass `Session.swap`); their trail is `telemetry.swap_log` /
-    `telemetry.replan_decisions` / `telemetry.plan_swaps`."""
+    `telemetry.replan_decisions` / `telemetry.plan_swaps`.
+
+    When the session observes (``ServeConfig.obs.level != "off"``), `obs`
+    carries the live `repro.obs.Observer`: `timeseries()` is the rolling-
+    window series, `export_trace(path)` the Perfetto trace_event JSON."""
 
     telemetry: Telemetry
     swaps: tuple[SwapRecord, ...] = ()
+    obs: Observer | None = None
 
     @property
     def attainment(self) -> float:
@@ -203,9 +209,25 @@ class Report:
     def plan_swaps(self) -> int:
         return self.telemetry.plan_swaps
 
+    def timeseries(self) -> dict:
+        """Per-window metric series (`repro.obs.WindowedMetrics.series`);
+        empty dict when the session serves with observability off."""
+        return self.obs.timeseries() if self.obs is not None else {}
+
+    def export_trace(self, path) -> None:
+        """Write the Perfetto trace_event JSON to `path` (trace level only
+        yields request/stage spans; raises when observability is off)."""
+        if self.obs is None:
+            raise LifecycleError(
+                "export_trace() needs ServeConfig.obs.level != 'off'")
+        self.obs.export_perfetto(path)
+
     def as_dict(self) -> dict:
-        return {**self.telemetry.snapshot(),
-                "managed_swaps": [s.as_dict() for s in self.swaps]}
+        out = {**self.telemetry.snapshot(),
+               "managed_swaps": [s.as_dict() for s in self.swaps]}
+        if self.obs is not None:
+            out["timeseries"] = self.timeseries()
+        return out
 
     def summary(self) -> str:
         s = self.telemetry.summary()
@@ -276,6 +298,7 @@ class Session:
         self._store = store
         self._plan: ClusterPlan | None = None
         self._dp: DataPlane | None = None
+        self._observer: Observer | None = None
         self._mode: str | None = None
         self._replan_loop: ReplanLoop | None = None
         self._state = _NEW
@@ -452,6 +475,10 @@ class Session:
                                   token_fn=cfg.token_fn)
             dispatcher = PoolDispatcher.from_runtime(
                 runtime, executors, max_inflight=cfg.max_inflight)
+        # level "off" means no Observer object at all: every data-plane
+        # hook stays a single `is not None` check (decision-identical path)
+        self._observer = (Observer(cfg.obs)
+                          if cfg.obs.level != "off" else None)
         self._dp = DataPlane(
             runtime,
             dispatcher=dispatcher,
@@ -460,6 +487,7 @@ class Session:
             seq_len=cfg.serve_seq_len,
             token_fn=cfg.token_fn,
             gc_interval_s=cfg.gc_interval_s,
+            observer=self._observer,
         )
         self._dp.arrival_hooks.append(self._observe_arrival)
         self._mode = mode
@@ -550,7 +578,8 @@ class Session:
         """Current rollup: SLO attainment, goodput, utilization, drops,
         swap records — live (callable mid-lifecycle and after drain)."""
         self._require_deployed("report")
-        return Report(telemetry=self._dp.tel, swaps=tuple(self.swaps))
+        return Report(telemetry=self._dp.tel, swaps=tuple(self.swaps),
+                      obs=self._observer)
 
     # ------------------------------------------------------------ executors
     def _layer_block_map(self, model: str) -> list:

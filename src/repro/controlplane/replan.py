@@ -414,7 +414,11 @@ class ReplanLoop:
             return False
         rate_rel = abs(total - self._baseline_rate) / max(self._baseline_rate, 1e-9)
         mix_tv = mix_distance(self.monitor.mix(now), self._baseline_mix)
-        return rate_rel > _RATE_TRIP or mix_tv > _MIX_TRIP
+        tripped = rate_rel > _RATE_TRIP or mix_tv > _MIX_TRIP
+        obs = getattr(self.dataplane, "obs", None)
+        if obs is not None:
+            obs.on_drift(now, rate_rel, mix_tv, tripped)
+        return tripped
 
     def maybe_replan(self, now: float) -> ClusterPlan | None:
         """Drift check at the configured cadence; past the thresholds, the
@@ -437,6 +441,9 @@ class ReplanLoop:
             )
             if len(self.policy.decisions) > n0:  # fresh, not a window repeat
                 self.dataplane.tel.replan_decisions.append(decision.as_dict())
+                obs = getattr(self.dataplane, "obs", None)
+                if obs is not None:
+                    obs.on_replan_decision(now, decision.as_dict())
             if not decision.accepted:
                 # the baseline is NOT adopted: the drift stays pending so a
                 # later (possibly cleaner) window can re-price it — the
@@ -466,6 +473,7 @@ class ReplanLoop:
         setup = self.runtime_setup or (
             self.store.reprice_runtime
             if self.config.source == "measured" else None)
+        obs = getattr(self.dataplane, "obs", None)
         try:
             plan = self.planner.plan(
                 profiles,
@@ -481,6 +489,8 @@ class ReplanLoop:
                 # state is deliberately left alone (see notify_failure).
                 self.failed_replans.append((now, "infeasible: empty plan"))
                 self._consecutive_failures += 1
+                if obs is not None:
+                    obs.on_replan_failure(now, "infeasible: empty plan")
                 if self.policy is not None:
                     self.policy.notify_failure(now)
                 self.set_baseline(rates)
@@ -498,11 +508,16 @@ class ReplanLoop:
             # not re-trip the same drift and re-run the solver every check.
             self.failed_replans.append((now, repr(exc)))
             self._consecutive_failures += 1
+            if obs is not None:
+                obs.on_replan_failure(now, repr(exc))
             if self.policy is not None:
                 self.policy.notify_failure(now)
             self.set_baseline(rates)
             return None
         self._consecutive_failures = 0
+        if obs is not None:
+            obs.on_replan_success(now, self.planner.last_wall_s,
+                                  plan.throughput)
         self.set_baseline(rates)
         if self.policy is not None:
             transients = self.dataplane.tel.swap_transient_s

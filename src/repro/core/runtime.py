@@ -152,9 +152,12 @@ def busy_by_class(rt: ClusterRuntime) -> dict[str, float]:
     scaled by its chip fraction).  Horizon-independent, so a plan epoch's
     contribution can be frozen when the epoch is garbage-collected and summed
     with later epochs at finalize without loss."""
-    busy: dict[str, float] = {c: 0.0 for c in rt.cluster.classes}
+    # synthetic runtimes (cluster=None, e.g. the equivalence suite's) still
+    # accumulate per class — they just have no declared class inventory
+    classes = rt.cluster.classes if rt.cluster is not None else ()
+    busy: dict[str, float] = {c: 0.0 for c in classes}
     for v in rt.vdevs:
-        busy[v.accel_class] += v.busy_s / v.vfrac
+        busy[v.accel_class] = busy.get(v.accel_class, 0.0) + v.busy_s / v.vfrac
     return busy
 
 

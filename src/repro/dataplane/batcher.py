@@ -73,6 +73,10 @@ class AdaptiveBatcher:
     def pending(self, model: str) -> int:
         return self.queues.pending(model)
 
+    def total_pending(self) -> int:
+        """All-model queue depth (the observability gauge)."""
+        return self.queues.total_pending()
+
     def take_all(self) -> list[Request]:
         """Drain every queue for a plan hot-swap; admission counters are not
         touched (the requests were already admitted once)."""

@@ -75,6 +75,10 @@ class PoolDispatcher:
         # with its plan epoch so a dispatcher reused across swap_plan calls
         # still buckets measurements under the epoch that submitted them
         self.current_epoch = 0
+        # optional repro.obs.Observer (set by DataPlane._install_runtime):
+        # every retired batch's wall measurements flow to it as a
+        # "batch.wall" journal event — the wall-clock side of the trace
+        self.obs = None
         self.max_inflight = max(1, max_inflight)
         self._inflight: list[_InFlight] = []
         self._completed: list[CompletedBatch] = []
@@ -220,6 +224,8 @@ class PoolDispatcher:
         )
         self._completed.append(done)
         self._done_by_id[job.job_id] = done
+        if self.obs is not None:
+            self.obs.on_batch_wall(done)
 
 
 class FeedbackController:

@@ -16,6 +16,11 @@ import numpy as np
 from repro.core.runtime import ClusterRuntime, busy_by_class
 from repro.core.types import RequestOutcome, attainment
 
+# snapshot() schema version for BENCH_e2e.json / report consumers: bump on
+# any breaking change to the snapshot layout (renamed/removed keys or
+# changed value meanings; additive keys do not bump it)
+SCHEMA_VERSION = 2
+
 
 @dataclass
 class DispatchRecord:
@@ -44,6 +49,10 @@ class Telemetry:
     exec_failures: int = 0
     inflight_hwm: int = 0
     probes_per_dispatch: float = 0.0
+    # Algorithm-1 hot-path counters accumulated across plan epochs (probe
+    # memo hits, batch-size bisection searches — see core.scheduler
+    # .SchedulerStats); filled by DataPlane.serve
+    scheduler: dict = field(default_factory=dict)
     horizon_s: float = 0.0
     # live re-planning (repro.controlplane): completed plan hot-swaps, and one
     # (virtual time, reason) entry per swap for continuity assertions
@@ -138,11 +147,16 @@ class Telemetry:
                 total[c] = total.get(c, 0.0) + b
         for c, b in busy_by_class(runtime).items():
             total[c] = total.get(c, 0.0) + b
-        counts = runtime.cluster.counts
-        self.utilization = {
-            c: total.get(c, 0.0) / (counts[c] * horizon) if counts.get(c) else 0.0
-            for c in runtime.cluster.classes
-        }
+        if runtime.cluster is None:
+            # synthetic runtimes (e.g. the equivalence suite's randomized
+            # twins) carry no cluster inventory: no utilization denominator
+            self.utilization = {}
+        else:
+            counts = runtime.cluster.counts
+            self.utilization = {
+                c: total.get(c, 0.0) / (counts[c] * horizon) if counts.get(c) else 0.0
+                for c in runtime.cluster.classes
+            }
         self._absorb_scales(current_epoch, runtime)
 
     def snapshot(self) -> dict:
@@ -151,11 +165,15 @@ class Telemetry:
             f"e{epoch}p{pid}s{si}": {
                 "n": len(v),
                 "mean_ms": float(np.mean(v)) * 1e3,
-                "p99_ms": float(np.percentile(v, 99)) * 1e3,
+                # a 1-sample percentile is just that sample; taking it
+                # directly avoids interpolation noise on singleton lists
+                "p99_ms": (float(v[0]) if len(v) == 1
+                           else float(np.percentile(v, 99))) * 1e3,
             }
             for (epoch, pid, si), v in self.stage_wall_s.items() if v
         }
         return {
+            "schema_version": SCHEMA_VERSION,
             "requests": len(self.outcomes),
             "served": self.served,
             "dropped": self.dropped,
@@ -165,6 +183,7 @@ class Telemetry:
             "mean_batch_size": self.mean_batch_size,
             "dispatches": len(self.dispatches),
             "probes_per_dispatch": self.probes_per_dispatch,
+            "scheduler": dict(self.scheduler),
             "queue_delay_p50_ms": self.queue_delay_pct(50) * 1e3,
             "queue_delay_p99_ms": self.queue_delay_pct(99) * 1e3,
             "drops": {

@@ -33,6 +33,14 @@ from repro.core.reservation import PipelineRuntime
 from repro.core.runtime import ClusterRuntime, build_runtime
 from repro.core.scheduler import Dispatch, Drop, WaitUntil
 from repro.core.types import ModelProfile, Request, RequestOutcome
+from repro.obs.observer import (
+    OP_ARRIVE,
+    OP_COMPLETE,
+    OP_DISPATCH,
+    OP_DROP,
+    OP_STAGE,
+    OP_XFER,
+)
 
 from .batcher import AdaptiveBatcher
 from .dispatcher import FeedbackController, PoolDispatcher
@@ -85,6 +93,7 @@ class DataPlane:
         feedback_alpha: float = 0.4,
         gc_interval_s: float = 1.0,
         scheduler_cls=None,
+        observer=None,
     ) -> None:
         if feedback not in ("planned", "measured"):
             raise ValueError(f"feedback must be planned|measured, got {feedback!r}")
@@ -119,9 +128,12 @@ class DataPlane:
         self._retired_dispatchers: dict[int, PoolDispatcher] = {}
         self._epoch_inflight: dict[int, int] = {}
         # scheduler stats accumulated from batchers retired by swap_plan, so
-        # probes_per_dispatch stays continuous across plan epochs
+        # probes_per_dispatch (and the cache-hit/bisection counters surfaced
+        # in Telemetry.snapshot) stay continuous across plan epochs
         self._retired_probe_calls = 0
         self._retired_dispatches = 0
+        self._retired_cache_hits = 0
+        self._retired_bisects = 0
         # physical resource occupancy shared across plan epochs, keyed by the
         # *stable* physical identity — chip (class, chip_id), NIC direction
         # (class, host_id) — mapping epoch -> latest known end of that epoch's
@@ -136,11 +148,16 @@ class DataPlane:
         # (snapshot-only residual seeding / keep-until-finalize accounting)
         self.cross_epoch_coupling = True
         self.epoch_gc = True
-        # optional execution log: when set to a list, every stage/transfer
-        # start appends ("stage", epoch, class, chip_id, start, dur) or
-        # ("xfer", epoch, ul_key, dl_key, start, dur) — the hook the
-        # cross-epoch no-double-booking property tests audit
-        self.exec_log: list | None = None
+        # optional repro.obs.Observer: when set, arrival/drop/dispatch/
+        # stage/transfer/complete/swap events flow into its windowed metrics
+        # and decision journal (which subsumes the old ad-hoc exec_log — the
+        # cross-epoch no-double-booking property tests audit "exec.stage"/
+        # "exec.xfer" journal events).  Hot sites push pre-encoded OP_*
+        # tuples straight into the observer's deferred buffer (one list
+        # append per event, materialized lazily off the serving path); None
+        # (the default) skips every hook behind an `is not None` check,
+        # keeping the off path decision-identical and near-zero-cost.
+        self.obs = observer
         self.vdev_virtual_free: dict[tuple[int, int], float] = {}
         self.nic_ul_free: dict[tuple[int, int], float] = {}
         self.nic_dl_free: dict[tuple[int, int], float] = {}
@@ -169,6 +186,8 @@ class DataPlane:
             # (swap_plan factories can reuse compiled executors), and stage
             # walls must not blend across them
             dispatcher.current_epoch = self.epoch
+            # wall-clock batch measurements flow to the same observer
+            dispatcher.obs = self.obs
         self.fb = (
             FeedbackController(runtime, alpha=self.feedback_alpha,
                                adapt_latency=self.feedback == "measured")
@@ -204,12 +223,23 @@ class DataPlane:
             self.rt.maybe_gc(t, self.gc_interval_s)
             horizon = max(horizon, t)
         self.tel.horizon_s = max(horizon, 1e-9)
-        probes = self._retired_probe_calls + self.batcher.stats.probe_calls
-        dispatches = self._retired_dispatches + self.batcher.stats.dispatches
+        st = self.batcher.stats
+        probes = self._retired_probe_calls + st.probe_calls
+        dispatches = self._retired_dispatches + st.dispatches
         self.tel.probes_per_dispatch = probes / max(1, dispatches)
+        self.tel.scheduler = {
+            "probe_calls": probes,
+            "dispatches": dispatches,
+            "probe_cache_hits": self._retired_cache_hits + st.probe_cache_hits,
+            "bisect_searches": self._retired_bisects + st.bisect_searches,
+        }
         self._harvest_measurements()
         self.tel.finalize(self.rt, self._retired_runtimes,
                           current_epoch=self.epoch)
+        if self.obs is not None:
+            self.obs.finalize(
+                self.tel.horizon_s,
+                self.rt.cluster.counts if self.rt.cluster is not None else None)
         return self.tel
 
     # --------------------------------------------------------------- arrivals
@@ -218,13 +248,13 @@ class DataPlane:
         offer to the queues, record reject/shed outcomes."""
         admitted, shed = self.batcher.offer(req, now)
         if not admitted:
-            self.tel.admission_rejects += 1
-            self._drop(req)
+            self._drop(req, now, "admission_reject")
         for r in shed:
-            self.tel.overflow_sheds += 1
-            self._drop(r)
+            self._drop(r, now, "overflow_shed")
 
     def _on_arrival(self, t: float, req: Request) -> None:
+        if self.obs is not None:
+            self.obs.push((OP_ARRIVE, t, req))
         self._admit(req, t)
         self._run_scheduler(req.model_name, t)
         for hook in list(self.arrival_hooks):
@@ -234,12 +264,10 @@ class DataPlane:
     def _run_scheduler(self, model: str, now: float) -> None:
         expired, actions = self.batcher.plan(model, now)
         for r in expired:
-            self.tel.expiry_drops += 1
-            self._drop(r)
+            self._drop(r, now, "expired")
         for action in actions:
             if isinstance(action, Drop):
-                self.tel.sched_drops += 1
-                self._drop(action.request)
+                self._drop(action.request, now, "scheduler")
             elif isinstance(action, WaitUntil):
                 # coalesce wake-ups per model
                 cur = self._wakes.get(model)
@@ -329,6 +357,8 @@ class DataPlane:
         pending = self.batcher.take_all()
         self._retired_probe_calls += self.batcher.stats.probe_calls
         self._retired_dispatches += self.batcher.stats.dispatches
+        self._retired_cache_hits += self.batcher.stats.probe_cache_hits
+        self._retired_bisects += self.batcher.stats.bisect_searches
         self.epoch += 1
         self._install_runtime(new_rt, new_dispatcher)
         transient = self._seed_residual_occupancy(old_rt, old_epoch, now)
@@ -338,6 +368,9 @@ class DataPlane:
         self.tel.plan_swaps += 1
         self.tel.swap_log.append((now, reason))
         self.tel.swap_transient_s.append(transient)
+        if self.obs is not None:
+            self.obs.on_swap(now, old_epoch, self.epoch, reason, transient,
+                             len(pending))
         models: list[str] = []
         for req in pending:
             # _admit rejects requests for models the new plan dropped (even
@@ -491,18 +524,19 @@ class DataPlane:
                 exec_id = self.dispatcher.submit(action, tokens)
             except Exception:  # noqa: BLE001 — executor died: return capacity
                 reservation.cancel(pr)
-                self.tel.exec_failures += 1
+                self.tel.exec_failures += 1  # per BATCH; drops are per request
                 for r in action.requests:
-                    self._drop(r)
+                    self._drop(r, now, "exec_failure")
                 return
         # telemetry only for batches that actually execute
+        depth_after = self.batcher.pending(action.pipeline.model_name)
         self.tel.dispatches.append(DispatchRecord(
             t_s=now,
             pipeline_id=action.pipeline.pipeline_id,
             batch_size=len(action.requests),
             planned_finish_s=pr.finish_time,
             oldest_deadline_s=min(r.deadline_s for r in action.requests),
-            queue_len_after=self.batcher.pending(action.pipeline.model_name),
+            queue_len_after=depth_after,
             epoch=self.epoch,
         ))
         self.tel.queue_delay_s.extend(now - r.arrival_s for r in action.requests)
@@ -521,6 +555,11 @@ class DataPlane:
         self.jobs[job.job_id] = job
         self._epoch_inflight[self.epoch] = (
             self._epoch_inflight.get(self.epoch, 0) + 1)
+        if self.obs is not None:
+            self.obs.push((OP_DISPATCH, now, job.job_id, self.epoch,
+                           action.pipeline.pipeline_id, action.requests,
+                           depth_after, len(self.jobs), pr.finish_time,
+                           self.batcher.total_pending()))
         self._start_stage(now, job)
 
     # -------------------------------------------------------------- execution
@@ -553,9 +592,10 @@ class DataPlane:
         self._phys_note(self._phys_chip, chip, job.epoch, start + dur)
         gpu.busy_s += dur
         gpu.timeline.correct(planned_start, planned_dur, start, dur)
-        if self.exec_log is not None:
-            self.exec_log.append(
-                ("stage", job.epoch, gpu.accel_class, gpu.chip_id, start, dur))
+        if self.obs is not None:
+            self.obs.push((OP_STAGE, job.job_id, job.epoch, job.pipeline_id,
+                           k, gpu.accel_class, gpu.chip_id, gpu.vdev_id,
+                           start, dur, len(job.requests)))
         self.push(start + dur, self.STAGE_DONE, (job.job_id, start, dur))
 
     def _on_stage_done(self, t: float, payload: tuple) -> None:
@@ -596,9 +636,9 @@ class DataPlane:
         self.nic_dl_free[(job.epoch, dst.node.node_id)] = start + dur
         self._phys_note(self._phys_nic_ul, ul_key, job.epoch, start + dur)
         self._phys_note(self._phys_nic_dl, dl_key, job.epoch, start + dur)
-        if self.exec_log is not None:
-            self.exec_log.append(
-                ("xfer", job.epoch, ul_key, dl_key, start, dur))
+        if self.obs is not None:
+            self.obs.push((OP_XFER, job.job_id, job.epoch, ul_key, dl_key,
+                           start, dur))
         self.push(start + dur, self.XFER_DONE, job_id)
 
     def _on_xfer_done(self, t: float, job_id: int) -> None:
@@ -615,18 +655,34 @@ class DataPlane:
                 completion_s=t,
                 pipeline_id=job.pipeline_id,
             ))
+            if self.obs is not None:
+                self.obs.push((OP_COMPLETE, t, req, job.job_id))
         del self.jobs[job.job_id]
         self._epoch_inflight[job.epoch] = (
             self._epoch_inflight.get(job.epoch, 1) - 1)
         self._maybe_gc_epoch(job.epoch)
 
-    def _drop(self, req: Request) -> None:
+    # per-request drop counters; exec_failure stays a per-BATCH counter at
+    # its call site, so it is deliberately absent here
+    _DROP_COUNTERS = {
+        "admission_reject": "admission_rejects",
+        "overflow_shed": "overflow_sheds",
+        "expired": "expiry_drops",
+        "scheduler": "sched_drops",
+    }
+
+    def _drop(self, req: Request, now: float, cause: str) -> None:
+        attr = self._DROP_COUNTERS.get(cause)
+        if attr is not None:
+            setattr(self.tel, attr, getattr(self.tel, attr) + 1)
         self.tel.outcomes.append(RequestOutcome(
             req_id=req.req_id,
             arrival_s=req.arrival_s,
             deadline_s=req.deadline_s,
             completion_s=None,
         ))
+        if self.obs is not None:
+            self.obs.push((OP_DROP, now, req, cause))
 
     # -------------------------------------------------------------- wall side
     def _harvest_dispatcher(self, disp: PoolDispatcher) -> None:

@@ -172,6 +172,11 @@ class QueueSet:
     def pending(self, model: str) -> int:
         return len(self.by_model.get(model, ()))
 
+    def total_pending(self) -> int:
+        """Queued requests across every model — the queue-depth gauge the
+        observability layer samples."""
+        return sum(len(q) for q in self.by_model.values())
+
     def _total(self, attr: str) -> int:
         return sum(getattr(q, attr) for q in self.by_model.values())
 

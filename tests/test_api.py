@@ -14,6 +14,7 @@ from repro.api import (
     LifecycleError,
     ModelSpec,
     Objective,
+    ObsConfig,
     PolicyConfig,
     ReplanConfig,
     ServeConfig,
@@ -53,6 +54,9 @@ def _config(**over):
     (dict(gc_interval_s=0.0), "gc_interval_s"),
     (dict(max_inflight=0), "max_inflight"),
     (dict(vfracs=()), "vfracs"),
+    (dict(obs=ObsConfig(level="verbose")), "obs.level"),
+    (dict(obs=ObsConfig(window_s=0.0)), "obs.window_s"),
+    (dict(obs=ObsConfig(span_sampling=1.5)), "obs.span_sampling"),
 ])
 def test_config_validation_rejects(mutation, match):
     with pytest.raises(ConfigError, match=match):
@@ -364,6 +368,7 @@ EXPECTED_ALL = [
     "LifecycleError",
     "ModelSpec",
     "Objective",
+    "ObsConfig",
     "PolicyConfig",
     "ReplanConfig",
     "Report",
@@ -416,6 +421,6 @@ def test_config_field_surface_snapshot():
         "weight"]
     assert [f.name for f in dataclasses.fields(ServeConfig)] == [
         "cluster", "models", "backend", "objective", "source", "feedback",
-        "admission", "replan", "replan_policy", "gc_interval_s", "vfracs",
-        "batch_sizes", "serve_seq_len", "max_inflight", "quantize_boundary",
-        "calibrate", "seed", "token_fn"]
+        "admission", "replan", "replan_policy", "gc_interval_s", "obs",
+        "vfracs", "batch_sizes", "serve_seq_len", "max_inflight",
+        "quantize_boundary", "calibrate", "seed", "token_fn"]

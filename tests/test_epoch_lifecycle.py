@@ -11,6 +11,7 @@ from repro.core.runtime import build_runtime
 from repro.core.types import ClusterSpec
 from repro.data.requests import multi_model_trace
 from repro.dataplane import DataPlane
+from repro.obs import ObsConfig, Observer
 
 CLUSTER = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 4})
 
@@ -171,21 +172,24 @@ class SlippingPlane(DataPlane):
         return dur
 
 
-def _cross_epoch_overlaps(exec_log, eps=1e-9):
+def _cross_epoch_overlaps(events, eps=1e-9):
     """(key, a, b) for every pair of *different-epoch* intervals that overlap
     on one physical resource.  Same-epoch overlap is legitimate (vfrac
-    sharing is priced into the latency model) and ignored."""
+    sharing is priced into the latency model) and ignored.  `events` is the
+    obs decision journal (exec.stage / exec.xfer dict events)."""
     chips: dict = {}
     nics_ul: dict = {}
     nics_dl: dict = {}
-    for rec in exec_log:
-        if rec[0] == "stage":
-            _, epoch, cls, chip, start, dur = rec
-            chips.setdefault((cls, chip), []).append((epoch, start, start + dur))
-        else:
-            _, epoch, ul_key, dl_key, start, dur = rec
-            nics_ul.setdefault(ul_key, []).append((epoch, start, start + dur))
-            nics_dl.setdefault(dl_key, []).append((epoch, start, start + dur))
+    for ev in events:
+        if ev["kind"] == "exec.stage":
+            epoch, start = ev["epoch"], ev["start_s"]
+            chips.setdefault((ev["accel_class"], ev["chip_id"]), []).append(
+                (epoch, start, start + ev["dur_s"]))
+        elif ev["kind"] == "exec.xfer":
+            epoch, start = ev["epoch"], ev["start_s"]
+            end = start + ev["dur_s"]
+            nics_ul.setdefault(tuple(ev["ul"]), []).append((epoch, start, end))
+            nics_dl.setdefault(tuple(ev["dl"]), []).append((epoch, start, end))
     bad = []
     for kind, groups in (("chip", chips), ("ul", nics_ul), ("dl", nics_dl)):
         for key, ivs in groups.items():
@@ -201,10 +205,10 @@ def _cross_epoch_overlaps(exec_log, eps=1e-9):
 
 
 def _run_slipping(profs, plan_a, plan_b, trace, swap_times, *, coupled, slip=2.5):
-    dp = SlippingPlane(build_runtime(plan_a, profs))
+    dp = SlippingPlane(build_runtime(plan_a, profs),
+                       observer=Observer(ObsConfig(level="trace")))
     dp.slip = slip
     dp.cross_epoch_coupling = coupled
-    dp.exec_log = []
     state = {}
     dp.arrival_hooks.append(_swap_script(dp, profs, plan_a, plan_b,
                                          swap_times, state))
@@ -225,12 +229,12 @@ def test_snapshot_seeding_bug_reproduces_then_coupling_fixes_it():
                                          swap_times, coupled=False)
     assert any(n > 0 for n in state_old["inflight_at_swap"]), \
         "scenario must swap with work in flight"
-    assert _cross_epoch_overlaps(dp_old.exec_log), \
+    assert _cross_epoch_overlaps(dp_old.obs.journal.events), \
         "legacy snapshot seeding should double-book under stage slip"
 
     dp_new, tel, _ = _run_slipping(profs, plan_a, plan_b, trace,
                                    swap_times, coupled=True)
-    assert _cross_epoch_overlaps(dp_new.exec_log) == []
+    assert _cross_epoch_overlaps(dp_new.obs.journal.events) == []
     assert len(tel.outcomes) == len(trace)
     assert len({o.req_id for o in tel.outcomes}) == len(trace)
 
@@ -250,7 +254,7 @@ def test_property_no_chip_or_nic_double_booking(slip, swap_offsets, seed):
     swap_times = sorted(set(round(t, 3) for t in swap_offsets))
     dp, tel, _ = _run_slipping(profs, plan_a, plan_b, trace, swap_times,
                                coupled=True, slip=slip)
-    assert _cross_epoch_overlaps(dp.exec_log) == []
+    assert _cross_epoch_overlaps(dp.obs.journal.events) == []
     # continuity: every request has exactly one outcome despite the slips
     assert len(tel.outcomes) == len(trace)
     assert len({o.req_id for o in tel.outcomes}) == len(trace)
