@@ -174,7 +174,9 @@ class Observer:
                             "deadline_s": req.deadline_s})
             elif op == OP_COMPLETE:
                 _, t, req, batch_id = rec
-                ok = t <= req.deadline_s
+                # same epsilon as RequestOutcome.ok (core/types.py), so
+                # windowed ok-sums match Telemetry attainment exactly
+                ok = t <= req.deadline_s + 1e-9
                 w.observe_complete(t, ok)
                 if trace and (sample_all or (not sample_none and (
                         req.req_id * _HASH) & 0xFFFFFFFF < thr)):

@@ -93,15 +93,22 @@ class WindowedMetrics:
         end = start + dur
         t = max(start, 0.0)
         ws = self.window_s
+        idx = int(t / ws)
         while t < end:
-            idx = int(t / ws)
             edge = (idx + 1) * ws
+            if edge <= t:
+                # Non-dyadic ws: int(t/ws) can lag a window, making the
+                # computed edge land at/before t.  Window `idx` ends before
+                # t, so it gets no share — step the index, never stall.
+                idx += 1
+                continue
             part = min(end, edge) - t
             w = self._w.get(idx)
             if w is None:
                 w = self._w[idx] = _Window()
             w.busy[accel_class] = w.busy.get(accel_class, 0.0) + part
             t = edge
+            idx += 1
 
     # -------------------------------------------------------------- totals
     def totals(self) -> dict:

@@ -179,6 +179,41 @@ def test_busy_seconds_conserved_across_window_edges():
     assert all(b <= 0.5 + 1e-12 for b in series["tpu-hi"])
 
 
+def test_busy_split_terminates_on_nondyadic_window_edge():
+    # Regression: with a non-dyadic window_s, float rounding can make
+    # int(t/ws) lag one window when t sits exactly on a computed edge
+    # ((idx+1)*ws / ws < idx+1); the old loop recomputed idx from t, got
+    # edge == t, part == 0, and never advanced.  ws/idx below is a found
+    # lagging pair, so this hung before the index-stepped rewrite.
+    ws, idx = 2.5367819512578302, 3982
+    t = (idx + 1) * ws
+    assert int(t / ws) == idx  # the pathology this test pins
+    wm = WindowedMetrics(window_s=ws)
+    wm.observe_busy("tpu-hi", t - 0.5, 1.0)
+    busy = wm.totals()["busy_s"]["tpu-hi"]
+    assert busy == pytest.approx(1.0, rel=1e-12)
+
+
+def test_windowed_ok_uses_outcome_deadline_epsilon():
+    # A completion inside RequestOutcome.ok's 1e-9 grace band must count as
+    # ok in the windowed metrics too, or windowed ok-sums drift from the
+    # telemetry attainment they are documented to reconcile with.
+    from types import SimpleNamespace
+
+    from repro.core.types import RequestOutcome
+
+    obs = Observer(ObsConfig(level="aggregate"))
+    deadline = 1.0
+    t_done = deadline + 0.5e-9  # late by less than the epsilon
+    req = SimpleNamespace(req_id=1, model_name="m", arrival_s=0.0,
+                          deadline_s=deadline)
+    outcome = RequestOutcome(req_id=1, arrival_s=0.0, deadline_s=deadline,
+                             completion_s=t_done)
+    assert outcome.ok
+    obs.on_complete(req, t_done, batch_id=0)
+    assert sum(obs.timeseries()["ok"]) == 1
+
+
 def test_utilization_series_matches_aggregate_utilization():
     obs = Observer(ObsConfig(level="aggregate", window_s=0.5))
     _, tel, _ = _swap_scenario(obs)
