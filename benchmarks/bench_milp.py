@@ -3,20 +3,47 @@
 (a) runtime vs device count (should be ~constant: templates don't grow);
 (b) runtime vs number of accelerator classes;
 (c) runtime vs pre-partition block count (the C1 complexity knob);
-(d) literal Appendix-A.2 MILP runtime at small block counts, for contrast.
+(d) literal Appendix-A.2 MILP runtime at small block counts, for contrast;
+(e) solver_scale — the 1000-device / 10-model control-plane scenario: cold
+    plan wall, cold vs warm-started replan wall (incumbent objective cutoff
+    + relaxed warm MIP gap), and the 16-chip multi-model literal-MILP vs
+    enumeration cross-check.  Results land in ``BENCH_sched.json`` under
+    the ``solver_scale`` key (merged; the scheduler bench's ``scales``
+    section is preserved).
+
+CLI:  PYTHONPATH=src python benchmarks/bench_milp.py [--quick]
+        [--assert-warm-speedup X]   # fail if warm replan wall is not at
+                                    # least X times faster than cold
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
+from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/bench_milp.py` (CI smoke)
+    sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
 
 from repro.core import costmodel as cm
 from repro.core import plan_cluster, solve_milp
 from repro.core.types import ClusterSpec
 
-from .common import make_setup, profile_for
+if __package__ in (None, ""):
+    from benchmarks.common import make_setup, profile_for
+else:
+    from .common import make_setup, profile_for
 
 ARCH = "stablelm-3b"
+
+BENCH_JSON = Path("BENCH_sched.json")
+
+# 1000 devices across the four accelerator classes — the paper's "large
+# heterogeneous cluster" regime where the master ILP dominates solve wall.
+SCALE_CLUSTER = ClusterSpec(counts={"tpu-hi": 150, "tpu-mid": 250,
+                                    "tpu-lo": 350, "tpu-edge": 250})
 
 
 def _time_plan(cluster, n_blocks=10, max_partitions=3):
@@ -29,6 +56,98 @@ def _time_plan(cluster, n_blocks=10, max_partitions=3):
     res = plan_cluster(profiles, tables, cluster, max_partitions=max_partitions)
     wall = time.perf_counter() - t0
     return wall, res
+
+
+def _min_norm(plan, weights):
+    return min(plan.throughput_of(m) / w for m, w in weights.items())
+
+
+def solver_scale(quick=False):
+    """Cold plan + cold-vs-warm replan at 1000 devices / 10 models.
+
+    The cold re-solve runs to the time limit proving its gap; the warm
+    re-solve carries the previous plan as an incumbent (objective cutoff,
+    so it can never return worse) and terminates at ``warm_gap`` instead of
+    grinding out the proof — that is where the replan-wall reduction
+    comes from.
+    """
+    from repro.configs import ARCH_IDS
+    from repro.controlplane import Objective, Planner, solve_milp_multi
+
+    time_limit = 10.0 if quick else 30.0
+    warm_gap = 1e-2 if quick else 5e-3
+    cluster = SCALE_CLUSTER
+    profiles, tables = {}, {}
+    t0 = time.perf_counter()
+    for arch in ARCH_IDS:
+        p = profile_for(arch, cluster, n_blocks=8)
+        profiles[arch] = p
+        tables[arch] = cm.build_latency_table(p, cluster, vfracs=(1, 2),
+                                              batch_sizes=(1, 4, 8))
+    profile_wall = time.perf_counter() - t0
+    w1 = {m: 1.0 for m in profiles}
+    w2 = {m: (1.2 if i % 2 else 0.8) for i, m in enumerate(profiles)}
+
+    def solve(weights, incumbent=None, gap=None):
+        planner = Planner(
+            backend="enumerate",
+            objective=Objective(weights=weights, max_partitions=2, top_k=40,
+                                time_limit_s=time_limit, warm_gap=gap),
+            warm_start=incumbent is not None)
+        t0 = time.perf_counter()
+        plan = planner.plan(profiles, tables, cluster, incumbent=incumbent)
+        return time.perf_counter() - t0, plan, planner
+
+    cold_wall, plan1, _ = solve(w1)
+    cold_replan_wall, plan_cold, _ = solve(w2)
+    warm_wall, plan_warm, wp = solve(w2, incumbent=plan1, gap=warm_gap)
+    mn_cold = _min_norm(plan_cold, w2)
+    mn_warm = _min_norm(plan_warm, w2)
+
+    # 16-chip cross-check: literal multi-model MILP restricted to the
+    # enumerator's feasible set must match template enumeration exactly.
+    xc = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
+    xprofs, xtbls = {}, {}
+    for arch in ("stablelm-3b", "qwen2-1.5b"):
+        p = profile_for(arch, xc, n_blocks=3)
+        xprofs[arch] = p
+        xtbls[arch] = cm.build_latency_table(p, xc, vfracs=(1, 2),
+                                             batch_sizes=(1, 2))
+    xw = {"stablelm-3b": 1.0, "qwen2-1.5b": 2.0}
+    t0 = time.perf_counter()
+    lit = solve_milp_multi(xprofs, xtbls, xc, weights=xw, slo_margin=0.4,
+                           max_partitions=2, time_limit_s=60.0,
+                           whole_chips=True)
+    lit_wall = time.perf_counter() - t0
+    enum = plan_cluster(xprofs, xtbls, xc, weights=xw, slo_margin=0.4,
+                        max_partitions=2).plan
+    mn_lit, mn_enum = _min_norm(lit, xw), _min_norm(enum, xw)
+    rel_err = abs(mn_lit - mn_enum) / max(mn_enum, 1e-9)
+
+    return {
+        "devices": sum(cluster.counts.values()),
+        "models": len(profiles),
+        "top_k": 40,
+        "max_partitions": 2,
+        "time_limit_s": time_limit,
+        "warm_gap": warm_gap,
+        "profile_wall_s": profile_wall,
+        "cold_plan_wall_s": cold_wall,
+        "cold_replan_wall_s": cold_replan_wall,
+        "warm_replan_wall_s": warm_wall,
+        "warm_speedup": cold_replan_wall / max(warm_wall, 1e-9),
+        "min_norm_cold": mn_cold,
+        "min_norm_warm": mn_warm,
+        "warm_vs_cold_objective": mn_warm / max(mn_cold, 1e-9),
+        "warm": wp.last_result.warm,
+        "milp_multi_16chip": {
+            "literal_min_norm": mn_lit,
+            "enum_min_norm": mn_enum,
+            "rel_err": rel_err,
+            "match": rel_err < 1e-6,
+            "literal_wall_s": lit_wall,
+        },
+    }
 
 
 def main(quick=False):
@@ -64,9 +183,59 @@ def main(quick=False):
         f"milp_literal[4blocks],{(time.perf_counter()-t0)*1e6:.0f},"
         f"thr={plan.throughput:.0f}rps"
     )
+
+    # (e) 1000-device solver scale: warm-vs-cold replan + 16-chip cross-check
+    out.extend(_solver_scale_lines(quick))
+    return out
+
+
+def _solver_scale_lines(quick=False):
+    """Run solver_scale, merge into BENCH_sched.json, return CSV lines."""
+    out = []
+    ss = solver_scale(quick=quick)
+    out.append(
+        f"solver_scale[{ss['devices']}dev_{ss['models']}mod],"
+        f"{ss['cold_plan_wall_s']*1e6:.0f},"
+        f"cold_replan={ss['cold_replan_wall_s']:.2f}s;"
+        f"warm_replan={ss['warm_replan_wall_s']:.2f}s;"
+        f"warm_speedup={ss['warm_speedup']:.2f}x;"
+        f"warm_vs_cold_obj={ss['warm_vs_cold_objective']:.4f}"
+    )
+    xc = ss["milp_multi_16chip"]
+    out.append(
+        f"milp_multi_16chip,{xc['literal_wall_s']*1e6:.0f},"
+        f"match={xc['match']};rel_err={xc['rel_err']:.2e}"
+    )
+    data = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
+    data["solver_scale"] = ss
+    BENCH_JSON.write_text(json.dumps(data, indent=2))
+    out.append(f"solver_scale_json,0,wrote={BENCH_JSON}")
     return out
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--solver-scale-only", action="store_true",
+                    help="run only the solver_scale scenario (CI gate)")
+    ap.add_argument("--assert-warm-speedup", type=float, default=None,
+                    help="fail unless warm replan wall beats cold by this "
+                         "factor at 1000-device scale")
+    args = ap.parse_args()
+    lines = (_solver_scale_lines(quick=args.quick) if args.solver_scale_only
+             else main(quick=args.quick))
+    for line in lines:
         print(line)
+    if args.assert_warm_speedup is not None:
+        ss = json.loads(BENCH_JSON.read_text())["solver_scale"]
+        got = ss["warm_speedup"]
+        if got < args.assert_warm_speedup:
+            raise SystemExit(
+                f"warm replan regression: {got:.2f}x speedup < floor "
+                f"{args.assert_warm_speedup:.2f}x "
+                f"(cold {ss['cold_replan_wall_s']:.2f}s, "
+                f"warm {ss['warm_replan_wall_s']:.2f}s)")
+        print(f"warm_speedup_floor,0,ok={got:.2f}x"
+              f">= {args.assert_warm_speedup:.2f}x")

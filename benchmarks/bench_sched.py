@@ -223,8 +223,10 @@ def main(quick=False):
             f"probe_wall_frac={r['new']['probe_wall_frac']:.2f};"
             f"decisions_equal={r['decisions_equal']}"
         )
-    BENCH_JSON.write_text(json.dumps(
-        {"bench": "sched", "quick": quick, "scales": results}, indent=2))
+    # merge: bench_milp's solver_scale section shares this file
+    data = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() else {}
+    data.update({"bench": "sched", "quick": quick, "scales": results})
+    BENCH_JSON.write_text(json.dumps(data, indent=2))
     out.append(f"sched_json,0,wrote={BENCH_JSON}")
     return out
 

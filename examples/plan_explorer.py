@@ -71,6 +71,42 @@ def main():
         assert enum_thr <= milp_thr * (1 + 1e-6), "enumerator beat the exact MILP"
         assert enum_thr >= milp_thr * 0.95, "enumerator lost >5% to the MILP"
 
+        # Multi-model exactness: the literal MILP restricted to the
+        # enumerator's feasible set (whole chips) must agree with template
+        # enumeration to float precision on the min-normalized objective.
+        from repro.controlplane import plan_cluster, solve_milp_multi
+
+        second = "qwen2-1.5b" if args.arch != "qwen2-1.5b" else "stablelm-3b"
+        weights = {args.arch: 1.0, second: 2.0}
+        cfg2 = ServeConfig(
+            cluster=cfg.cluster,
+            models=(ModelSpec(arch=args.arch, slo_scale=args.slo_scale,
+                              seq_len=SERVE_SEQ, n_blocks=3),
+                    ModelSpec(arch=second, slo_scale=args.slo_scale,
+                              seq_len=SERVE_SEQ, n_blocks=3)),
+            objective=Objective(weights=weights, max_partitions=2,
+                                time_limit_s=60.0),
+            vfracs=(1, 2),
+            batch_sizes=(1, 2),
+        )
+        store2 = Session.from_config(cfg2).profile()
+        profs2 = dict(store2.profiles)
+        tbls2 = {a: store2.analytic_table(a) for a in profs2}
+        lit = solve_milp_multi(profs2, tbls2, cfg.cluster, weights=weights,
+                               slo_margin=0.4, max_partitions=2,
+                               time_limit_s=60.0, whole_chips=True)
+        enum2 = plan_cluster(profs2, tbls2, cfg.cluster, weights=weights,
+                             slo_margin=0.4, max_partitions=2).plan
+
+        def min_norm(plan):
+            return min(plan.throughput_of(m) / w for m, w in weights.items())
+
+        rel2 = abs(min_norm(lit) - min_norm(enum2)) / max(min_norm(enum2), 1e-9)
+        print(f"multi-model MILP vs enumeration min-norm throughput: "
+              f"{min_norm(lit):.2f} vs {min_norm(enum2):.2f} rps "
+              f"(rel err {rel2:.2e})")
+        assert rel2 < 1e-6, "multi-model literal MILP diverged from enumeration"
+
 
 if __name__ == "__main__":
     main()

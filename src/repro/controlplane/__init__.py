@@ -23,7 +23,7 @@ The old deep import paths (`repro.core.milp`, `repro.core.enumerate`,
 """
 
 from .baselines import plan_dart_r, plan_np  # noqa: F401
-from .milp import solve_milp  # noqa: F401
+from .milp import solve_milp, solve_milp_multi  # noqa: F401
 from .planner import BACKENDS, Objective, Planner  # noqa: F401
 from .profiles import ProfileStore  # noqa: F401
 from .replan import (  # noqa: F401
@@ -34,11 +34,13 @@ from .replan import (  # noqa: F401
     ReplanEvent,
     ReplanLoop,
     ReplanPolicy,
+    estimate_benefit_scalar,
     mix_distance,
 )
 from .templates import (  # noqa: F401
     PlanningResult,
     Template,
+    TemplateCache,
     enumerate_templates,
     plan_cluster,
 )

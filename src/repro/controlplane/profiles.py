@@ -166,19 +166,22 @@ class ProfileStore:
             # monotonicity the scheduler's bisection relies on: re-validate
             validate_bisection(prt)
 
-    def request_cost(self, name: str, source: str = "analytic") -> float:
-        """Chip-seconds one request of `name` consumes, as an exchange rate.
+    def request_cost_by_class(self, name: str,
+                              source: str = "analytic") -> dict[str, float]:
+        """Chip-seconds one request of `name` consumes on EACH accelerator
+        class: the per-class exchange rates of the replan gate's capacity
+        pools.
 
-        Full-model latency on the cheapest class, priced whole-chip
-        (v = min vfracs, i.e. the coarsest split) at the largest profiled
-        batch, amortized per request.  This is the rate the replan policy
-        uses to convert per-model throughput into fungible capacity units
-        when estimating what a re-solve could redistribute — an estimate
-        (it ignores partitioning/SLO/interference structure), not a bound.
-        Runs on the control loop's per-check path, so the measured variant
-        re-prices just the needed partitions through `scale_for` instead of
-        materializing the dense measured table (block-uniform per
-        (class, v, b) key, so the result is identical).
+        Full-model latency on the class, priced whole-chip (v = min vfracs,
+        i.e. the coarsest split) at the largest profiled batch, amortized per
+        request.  Estimates only (partitioning/SLO/interference structure is
+        ignored), but per-class: a model that is 4x slower on the lite class
+        costs 4x more of that pool, which is exactly the heterogeneity the
+        scalar `request_cost` exchange rate erases.  Runs on the control
+        loop's per-check path, so the measured variant re-prices just the
+        needed partitions through `scale_for` instead of materializing the
+        dense measured table (block-uniform per (class, v, b) key, so the
+        result is identical).
         """
         tbl = self.analytic_table(name)
         b = max(tbl.batch_sizes)
@@ -186,14 +189,23 @@ class ProfileStore:
         n = tbl.profile.n_blocks
         if source == "measured":
             means = self._fallback_means(name)
-            lat = min(tbl.partition(0, n, cls, v, b)
-                      * self.scale_for(name, cls, v, b, means)
-                      for cls in tbl.classes)
+            lat = {cls: tbl.partition(0, n, cls, v, b)
+                   * self.scale_for(name, cls, v, b, means)
+                   for cls in tbl.classes}
         elif source == "analytic":
-            lat = min(tbl.partition(0, n, cls, v, b) for cls in tbl.classes)
+            lat = {cls: tbl.partition(0, n, cls, v, b) for cls in tbl.classes}
         else:
             raise ValueError(f"source must be analytic|measured, got {source!r}")
-        return lat / (v * b)
+        return {cls: t / (v * b) for cls, t in lat.items()}
+
+    def request_cost(self, name: str, source: str = "analytic") -> float:
+        """Chip-seconds one request of `name` consumes, as a single scalar
+        exchange rate: the best case over classes of
+        `request_cost_by_class`.  Kept for the fungible-capacity estimator
+        (`replan.estimate_benefit_scalar`) and callers that want one number;
+        the policy gate itself prices per-class pools.
+        """
+        return min(self.request_cost_by_class(name, source).values())
 
     def table(self, name: str, source: str = "analytic") -> LatencyTable:
         if source == "analytic":

@@ -32,6 +32,9 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
+import numpy as np
+from scipy.optimize import linprog
+
 from repro.core.plan import ClusterPlan
 from repro.core.types import ClusterSpec, ModelProfile
 
@@ -133,6 +136,36 @@ class ReplanEvent:
     rates: dict[str, float]
     weights: dict[str, float]
     throughput_rps: float
+
+
+def estimate_benefit_scalar(rates: dict[str, float], plan: ClusterPlan,
+                            store: ProfileStore,
+                            source: str = "analytic") -> float:
+    """The legacy fungible-capacity benefit estimate (one best-case
+    `request_cost` exchange rate; capacity is a single pool).
+
+    Kept as the comparison baseline for the per-class estimator the policy
+    gate now uses: on heterogeneous mixes this prices every model at its
+    *best* class and pools all classes together, so it over-credits
+    re-solves whenever the shared best class is the scarce one (see
+    `ReplanPolicy.estimate_benefit`).
+    """
+    total = sum(rates.values())
+    if total <= 0:
+        return 0.0
+    models = sorted(set(store.profiles) | set(rates))
+    costs = {m: store.request_cost(m, source) for m in models
+             if m in store.profiles}
+    attain_now = sum(min(rates.get(m, 0.0), plan.throughput_of(m))
+                     for m in models)
+    capacity = sum(plan.throughput_of(m) * costs.get(m, 0.0)
+                   for m in models)
+    unit = sum((rates.get(m, 0.0) / total) * costs.get(m, 0.0)
+               for m in models)
+    if unit <= 0.0 or capacity <= 0.0:
+        return 0.0
+    candidate = min(total, capacity / unit)
+    return max(0.0, candidate - attain_now)
 
 
 # ---------------------------------------------------------------------------
@@ -258,25 +291,61 @@ class ReplanPolicy:
     def estimate_benefit(self, rates: dict[str, float], plan: ClusterPlan,
                          store: ProfileStore, source: str = "analytic") -> float:
         """Goodput (rps) a mix-matched re-solve could add over the current
-        plan, assuming capacity redistributes at `request_cost` exchange
-        rates.  Models the plan serves but the workload dropped free their
-        capacity; models the plan under-serves claim it back."""
+        plan, pricing capacity as per-CLASS pools instead of one fungible
+        exchange rate.
+
+        A small transportation LP: maximize mix-matched goodput G subject to
+        every model m drawing its share `G * s_m` from per-class allocations
+        `x_mk` that fit the cluster's per-class chip inventory at the
+        `request_cost_by_class` rates,
+
+            max G   s.t.  sum_k x_mk = G * s_m          (each model m)
+                          sum_m r_mk * x_mk <= C_k      (each class k)
+                          x >= 0,  0 <= G <= total.
+
+        Still optimistic by construction (no partitioning/SLO/transfer
+        structure, so the exact solver gets the final word), but it no
+        longer prices every model at its best class against one pooled
+        capacity: when the mix piles onto models whose only fast class is
+        the scarce one, the class constraint caps G where the scalar
+        estimator would over-credit the re-solve and open the gate for
+        nothing.  Falls back to the scalar estimate if the LP solver bails.
+        """
         total = sum(rates.values())
         if total <= 0:
             return 0.0
         models = sorted(set(store.profiles) | set(rates))
-        costs = {m: store.request_cost(m, source) for m in models
+        # per-class chip-seconds/request; unprofiled-but-requested models
+        # price as free (same optimism as the scalar estimator)
+        costs = {m: store.request_cost_by_class(m, source) for m in models
                  if m in store.profiles}
         attain_now = sum(min(rates.get(m, 0.0), plan.throughput_of(m))
                          for m in models)
-        capacity = sum(plan.throughput_of(m) * costs.get(m, 0.0)
-                       for m in models)
-        unit = sum((rates.get(m, 0.0) / total) * costs.get(m, 0.0)
-                   for m in models)
-        if unit <= 0.0 or capacity <= 0.0:
+        classes = list(plan.cluster.classes)
+        cap = [float(plan.cluster.counts[k]) for k in classes]
+        if not costs or not any(c > 0 for c in cap):
             return 0.0
-        candidate = min(total, capacity / unit)
-        return max(0.0, candidate - attain_now)
+        n_m, n_k = len(models), len(classes)
+        # variables: [G, x_00 .. x_{m-1,k-1}] (model-major)
+        c = np.zeros(1 + n_m * n_k)
+        c[0] = -1.0
+        a_eq = np.zeros((n_m, 1 + n_m * n_k))
+        for i, m in enumerate(models):
+            a_eq[i, 0] = -rates.get(m, 0.0) / total
+            a_eq[i, 1 + i * n_k: 1 + (i + 1) * n_k] = 1.0
+        a_ub = np.zeros((n_k, 1 + n_m * n_k))
+        for i, m in enumerate(models):
+            r = costs.get(m, {})
+            for j, k in enumerate(classes):
+                a_ub[j, 1 + i * n_k + j] = r.get(k, 0.0)
+        res = linprog(
+            c, A_ub=a_ub, b_ub=cap, A_eq=a_eq, b_eq=np.zeros(n_m),
+            bounds=[(0.0, total)] + [(0.0, None)] * (n_m * n_k),
+            method="highs",
+        )
+        if res.status != 0 or res.x is None:
+            return estimate_benefit_scalar(rates, plan, store, source)
+        return max(0.0, float(res.x[0]) - attain_now)
 
     # ------------------------------------------------------------- decision
     def consider(self, now: float, rates: dict[str, float], plan: ClusterPlan,
@@ -480,6 +549,13 @@ class ReplanLoop:
                 self.store.tables(self.config.source),
                 self.cluster,
                 objective=self.objective.with_weights(weights),
+                # warm start: the live plan is a feasible point of the new
+                # solve whenever the drift was workload-only, so the solver
+                # prices the re-solve as a perturbation (template cache +
+                # priority columns + objective cutoff) instead of from
+                # scratch — keeping the wall the policy's cost EWMA learns
+                # honestly small
+                incumbent=self.dataplane.rt.plan,
             )
             if not plan.pipelines:
                 # Infeasible at this workload: keep the old plan, but adopt

@@ -162,6 +162,76 @@ def _pareto_prune(templates: list[Template]) -> list[Template]:
 
 
 # ----------------------------------------------------------------------------
+# Warm-start state
+# ----------------------------------------------------------------------------
+
+
+class TemplateCache:
+    """Memoizes per-model template enumeration (and the per-class chips/rps
+    column matrix) across solves — the warm-start state a `Planner` carries
+    between drift re-solves.
+
+    Enumeration is the dominant cost at scale and, like the paper's Fig. 14a
+    planner, never reads device COUNTS — only classes, NIC parameters, the
+    latency table, the SLO, and the solver knobs.  The key therefore
+    excludes counts: a cluster resize or a workload-mix change reuses the
+    cached templates wholesale, while any change to what enumeration
+    actually reads (re-profiled tables, different margin/partition knobs,
+    new classes) misses and re-enumerates.  Entries are frozen Templates
+    shared across solves; nothing downstream mutates them."""
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, tuple[list[Template], np.ndarray]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(profile: ModelProfile, table: LatencyTable, cluster: ClusterSpec,
+             slo_margin: float, max_partitions: int) -> tuple:
+        return (
+            profile.model_name,
+            profile.n_blocks,
+            profile.slo_s,
+            profile.boundary_quant_factor,
+            tuple(b.out_bytes for b in profile.blocks),
+            tuple(cluster.classes),
+            cluster.nic_derate,
+            table.vfracs,
+            table.batch_sizes,
+            hash(tuple(sorted(table.lat.items()))),
+            slo_margin,
+            max_partitions,
+        )
+
+    def get(self, profile: ModelProfile, table: LatencyTable,
+            cluster: ClusterSpec, slo_margin: float, max_partitions: int,
+            ) -> tuple[list[Template], np.ndarray]:
+        key = self._key(profile, table, cluster, slo_margin, max_partitions)
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+            templates = enumerate_templates(
+                profile, table, cluster, slo_margin, max_partitions
+            )
+            hit = self._store[key] = (
+                templates, _cost_matrix(templates, cluster.classes)
+            )
+        else:
+            self.hits += 1
+        return hit
+
+
+def _cost_matrix(templates: list[Template], classes: tuple[str, ...]) -> np.ndarray:
+    """Per-class chips/rps of each template: the phase-1 LP's columns."""
+    cost = np.zeros((len(classes), len(templates)))
+    for j, t in enumerate(templates):
+        c = t.chips_per_rps()
+        for i, cname in enumerate(classes):
+            cost[i, j] = c.get(cname, 0.0)
+    return cost
+
+
+# ----------------------------------------------------------------------------
 # Master problem
 # ----------------------------------------------------------------------------
 
@@ -171,6 +241,11 @@ class PlanningResult:
     plan: ClusterPlan
     n_templates: int
     lp_upper_bound: float
+    # warm-start accounting for the solve that produced this result (None =
+    # cold API call with no cache/incumbent): template cache hits/misses,
+    # how many incumbent pipelines mapped onto current templates, and the
+    # objective cutoff injected into the master ILP (None = no cutoff)
+    warm: dict | None = None
 
 
 def plan_cluster(
@@ -182,12 +257,33 @@ def plan_cluster(
     max_partitions: int = 3,
     top_k: int = 250,
     time_limit_s: float = 60.0,
+    incumbent: ClusterPlan | None = None,
+    template_cache: TemplateCache | None = None,
+    warm_gap: float | None = None,
 ) -> PlanningResult:
     """Plan pooled pipelines for one or more models on `cluster`.
 
     Single model: maximize total throughput.  Multiple models: maximize the
     minimum workload-normalized throughput (paper section 3 Objective).
-    """
+
+    Warm start (both optional, both exactness-preserving):
+    `template_cache` skips re-enumeration for every model whose inputs are
+    unchanged; `incumbent` (the live ClusterPlan being replaced) has its
+    pipelines mapped back onto current templates — matched columns are
+    force-included at the FRONT of the master ILP's column set and the
+    incumbent's re-priced objective enters as a cutoff constraint, pruning
+    the branch-and-bound tree below a point known to be feasible.  A stale
+    incumbent (re-profiled tables, changed class set) simply fails to match
+    and the solve proceeds cold.
+
+    `warm_gap` (only honoured when the incumbent mapped, i.e. the cutoff is
+    active) relaxes the master ILP's relative MIP-gap termination for the
+    re-solve: at scale branch-and-bound finds near-optimal plans in seconds
+    and spends the remaining time budget *proving* the bound, which a drift
+    re-solve does not need — the cutoff already guarantees the result is no
+    worse than the live plan, and `plan.dual_bound` keeps the honest bound.
+    None (the default) keeps the cold path's tight gap: warm solves then
+    return the cold optimum exactly whenever the solver closes the gap."""
     t0 = time.perf_counter()
     names = list(profiles)
     for n in names:
@@ -195,29 +291,43 @@ def plan_cluster(
             raise ValueError(
                 f"profiles key {n!r} != profile.model_name {profiles[n].model_name!r}")
     weights = weights or {n: 1.0 for n in names}
+    hits0 = template_cache.hits if template_cache is not None else 0
+    miss0 = template_cache.misses if template_cache is not None else 0
     templates: list[Template] = []
+    cost_chunks: list[np.ndarray] = []
     for n in names:
-        templates.extend(
-            enumerate_templates(
+        if template_cache is not None:
+            tmpl, cost_m = template_cache.get(
                 profiles[n], tables[n], cluster, slo_margin, max_partitions
             )
-        )
+        else:
+            tmpl = enumerate_templates(
+                profiles[n], tables[n], cluster, slo_margin, max_partitions
+            )
+            cost_m = _cost_matrix(tmpl, cluster.classes)
+        templates.extend(tmpl)
+        cost_chunks.append(cost_m)
+    warm_info = {
+        "template_cache_hits": (template_cache.hits - hits0
+                                if template_cache is not None else 0),
+        "template_cache_misses": (template_cache.misses - miss0
+                                  if template_cache is not None else 0),
+        "incumbent_columns": 0,
+        "cutoff": None,
+    }
     if not templates:
         return PlanningResult(
             plan=ClusterPlan(cluster=cluster, pipelines=[],
                              solver_wall_s=time.perf_counter() - t0),
             n_templates=0,
             lp_upper_bound=0.0,
+            warm=warm_info,
         )
 
     classes = cluster.classes
     # --- Phase 1: LP over all templates (vars = x_t >= 0 rps) ---------------
     nt = len(templates)
-    cost = np.zeros((len(classes), nt))
-    for j, t in enumerate(templates):
-        c = t.chips_per_rps()
-        for i, cname in enumerate(classes):
-            cost[i, j] = c.get(cname, 0.0)
+    cost = np.concatenate(cost_chunks, axis=1)
     budget = np.array([float(cluster.counts[c]) for c in classes])
 
     multi = len(names) > 1
@@ -246,13 +356,73 @@ def plan_cluster(
         lp_ub = -res.fun if res.status == 0 else 0.0
         lp_x = res.x[:nt] if res.x is not None else np.zeros(nt)
 
+    # --- Incumbent mapping: priority columns + objective cutoff -------------
+    # Each incumbent pipeline is looked up among CURRENT templates by its
+    # full identity (model, bounds, classes, vfracs, batch).  A full match
+    # whose chip counts fit the current budget is a known-feasible point of
+    # the master ILP, so its re-priced objective is a valid cutoff; any
+    # mismatch (pruned template, fractional chips, over budget after a
+    # resize) disables the cutoff rather than risking exactness.
+    inc_cols: list[int] = []
+    cutoff: float | None = None
+    if incumbent is not None and incumbent.pipelines:
+        by_ident = {
+            (t.model_name, t.bounds, t.classes, t.vfracs, t.batch): j
+            for j, t in enumerate(templates)
+        }
+        matched: dict[int, list[int]] = {}
+        ok = True
+        for pl in incumbent.pipelines:
+            stages = pl.stages
+            ident = (
+                pl.model_name,
+                (stages[0].block_start,) + tuple(s.block_end for s in stages),
+                tuple(s.accel_class for s in stages),
+                tuple(s.vfrac for s in stages),
+                pl.batch_size,
+            )
+            j = by_ident.get(ident)
+            if j is None or any(s.n_vdev % s.vfrac != 0 for s in stages):
+                ok = False
+                break
+            chips = [s.n_vdev // s.vfrac for s in stages]
+            prev = matched.get(j)
+            matched[j] = chips if prev is None else [
+                a + b for a, b in zip(prev, chips)
+            ]
+        if ok and matched:
+            thr = {n: 0.0 for n in names}
+            used: dict[str, int] = {}
+            for j, chips in matched.items():
+                t = templates[j]
+                thr[t.model_name] += min(
+                    t.stage_throughput_per_vdev(d) * t.vfracs[d] * chips[d]
+                    for d in range(t.depth)
+                )
+                for d in range(t.depth):
+                    used[t.classes[d]] = used.get(t.classes[d], 0) + chips[d]
+            if all(used[c] <= cluster.counts.get(c, 0) for c in used):
+                val = (min(thr[n] / weights[n] for n in names) if multi
+                       else sum(thr.values()))
+                if val > 0.0:
+                    cutoff = val * (1.0 - 1e-9)
+                    inc_cols = list(matched)
+    warm_info["incumbent_columns"] = len(inc_cols)
+    warm_info["cutoff"] = cutoff
+
     # --- Phase 2: exact integer master over the most promising columns ------
     # LP-ranked, but never drop zero-mass columns while top_k capacity is
     # free: a degenerate LP optimum can put zero mass on the column the
     # *integral* optimum needs (whole-chip granularity), and with nt <= top_k
     # the master ILP over every column is exact — matching the literal MILP.
+    # Incumbent columns are pinned at the FRONT of the active set (priority
+    # ordering: HiGHS finds the incumbent-supported integral point early,
+    # which with the cutoff prunes most of the tree on drift re-solves).
     order = np.argsort(-lp_x)
-    active = [int(i) for i in order[: min(top_k, nt)]]
+    inc_set = set(inc_cols)
+    active = inc_cols + [
+        int(i) for i in order[: min(top_k, nt)] if int(i) not in inc_set
+    ]
     # Always include the best single-stage fallback column per (model, class)
     # — highest per-chip throughput — so the integral problem keeps a feasible
     # column for every model/class even when the LP cut dropped them all.
@@ -272,10 +442,13 @@ def plan_cluster(
 
     sel = [templates[j] for j in active]
     plan = _solve_master_ilp(
-        sel, profiles, cluster, names, weights, multi, time_limit_s
+        sel, profiles, cluster, names, weights, multi, time_limit_s,
+        cutoff=cutoff,
+        mip_rel_gap=warm_gap if cutoff is not None else None,
     )
     plan.solver_wall_s = time.perf_counter() - t0
-    return PlanningResult(plan=plan, n_templates=nt, lp_upper_bound=lp_ub)
+    return PlanningResult(plan=plan, n_templates=nt, lp_upper_bound=lp_ub,
+                          warm=warm_info)
 
 
 def _solve_master_ilp(
@@ -286,6 +459,8 @@ def _solve_master_ilp(
     weights: dict[str, float],
     multi: bool,
     time_limit_s: float,
+    cutoff: float | None = None,
+    mip_rel_gap: float | None = None,
 ) -> ClusterPlan:
     """Exact ILP over integer *chip* counts c_{t,d} (vdevs = v * c).
 
@@ -344,6 +519,14 @@ def _solve_master_ilp(
                 if t.model_name == n:
                     coef[x_off + j] = -1.0
             add_row(coef, -np.inf, 0.0)
+    # warm-start cutoff: the incumbent's re-priced objective is feasible, so
+    # the optimum can only sit at or above it — branch-and-bound may prune
+    # everything below without losing exactness
+    if cutoff is not None and cutoff > 0.0:
+        if multi:
+            add_row({z_idx: 1.0}, cutoff, np.inf)
+        else:
+            add_row({x_off + j: 1.0 for j in range(nt)}, cutoff, np.inf)
 
     c = np.zeros(nv)
     if multi:
@@ -359,6 +542,27 @@ def _solve_master_ilp(
         for d in range(t.depth):
             integrality[r_off[j] + d] = 1
             ub[r_off[j] + d] = cluster.counts[t.classes[d]]
+    # Every continuous column gets its tightest implied capacity bound.
+    # This is a valid strengthening (x_t can never exceed the whole class
+    # inventory running its slowest stage) AND a required workaround: the
+    # vendored HiGHS in scipy 1.14 can terminate branch-and-bound early with
+    # a falsely-closed gap when continuous columns are unbounded above —
+    # observed returning 46% below the true optimum on a 149-column
+    # multi-model instance (see tests/test_milp.py cross-checks).
+    xcap = np.zeros(nt)
+    for j, t in enumerate(templates):
+        xcap[j] = min(
+            t.stage_throughput_per_vdev(d) * t.vfracs[d]
+            * cluster.counts[t.classes[d]]
+            for d in range(t.depth)
+        )
+        ub[x_off + j] = xcap[j]
+    if multi:
+        ub[z_idx] = min(
+            sum(xcap[j] for j, t in enumerate(templates) if t.model_name == n)
+            / weights[n]
+            for n in names
+        )
 
     A = sparse.csr_matrix((vals, (rows, cols)), shape=(len(lbs), nv))
     res = scipy_milp(
@@ -366,7 +570,8 @@ def _solve_master_ilp(
         constraints=LinearConstraint(A, np.array(lbs), np.array(ubs)),
         integrality=integrality,
         bounds=Bounds(np.zeros(nv), ub),
-        options={"time_limit": time_limit_s, "mip_rel_gap": 1e-4},
+        options={"time_limit": time_limit_s,
+                 "mip_rel_gap": mip_rel_gap if mip_rel_gap is not None else 1e-4},
     )
     if res.x is None:
         raise RuntimeError(f"master ILP failed: {res.message}")

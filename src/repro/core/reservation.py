@@ -293,15 +293,24 @@ class PipelineRuntime:
     # runtime-build / re-calibration time; defaults to the always-correct
     # linear fallback.  See DESIGN.md section 8 for the argument.
     bisection_ok: bool = False
+    # Gate outcome in full: "exact" (bisection_ok — finish itself is
+    # monotone), "envelope" (latency tables monotone but upstream pools span
+    # nodes: finish is NOT provably monotone, yet it is sandwiched between
+    # the monotone bounds probe_lower_bound/probe_upper_envelope, so the
+    # scheduler bisects the bounds and exact-probes only the ambiguous
+    # band), or "linear" (non-monotone tables — full scan).  Stamped by
+    # validate_bisection() alongside bisection_ok.
+    bisection_mode: str = "linear"
 
 
 def validate_bisection(pipeline: PipelineRuntime) -> bool:
-    """Decide whether batch-size bisection is decision-safe for `pipeline`
-    and stamp `pipeline.bisection_ok`.
+    """Decide how the scheduler's batch-size search may run for `pipeline`:
+    stamp `pipeline.bisection_mode` and `pipeline.bisection_ok`.
 
-    probe()'s finish time is monotone non-decreasing in bs when every
-    per-member finish is monotone AND the per-member timing environment does
-    not depend on which member won the previous stage.  Concretely:
+    probe()'s finish time is provably monotone non-decreasing in bs (mode
+    "exact", bisection_ok=True) when every per-member finish is monotone AND
+    the per-member timing environment does not depend on which member won
+    the previous stage.  Concretely:
 
     * every stage's latency table must induce a non-decreasing latency over
       1..unified_batch (measured tables can violate this — profiling noise);
@@ -316,25 +325,155 @@ def validate_bisection(pipeline: PipelineRuntime) -> bool:
       monotonicity (stricter than the obvious table-only condition; see
       DESIGN.md section 8).
 
+    When only the last condition fails (pools span hosts — the common case
+    once a class pool exceeds chips_per_host), the finish is still bracketed
+    by two monotone functions of bs — probe_lower_bound below it and
+    probe_upper_envelope above it — so the scheduler can bisect the bounds
+    and fall back to exact probes only inside the band where they disagree
+    about feasibility (mode "envelope"; DESIGN.md section 11).  bisection_ok
+    keeps its original strict meaning (finish itself provably monotone), so
+    existing callers reading the bool are unaffected.
+
     Call again after replacing any `latency_by_batch` table
     (calibrate_runtime, ProfileStore.reprice_runtime do)."""
-    ok = True
-    for si, stage in enumerate(pipeline.stages):
+    monotone = True
+    for stage in pipeline.stages:
         prev = None
         for b in range(1, pipeline.unified_batch + 1):
             cur = stage._base_latency(b)
             if prev is not None and cur < prev:
-                ok = False
+                monotone = False
                 break
             prev = cur
-        if not ok:
+        if not monotone:
             break
-        if si > 0 and stage.in_bytes_per_req > 0:
-            if len({id(v.node) for v in pipeline.stages[si - 1].vdevs}) > 1:
-                ok = False
-                break
-    pipeline.bisection_ok = ok
-    return ok
+    single_upstream = True
+    if monotone:
+        for si, stage in enumerate(pipeline.stages):
+            if si > 0 and stage.in_bytes_per_req > 0:
+                if len({id(v.node) for v in pipeline.stages[si - 1].vdevs}) > 1:
+                    single_upstream = False
+                    break
+    if not monotone:
+        pipeline.bisection_mode = "linear"
+    elif single_upstream:
+        pipeline.bisection_mode = "exact"
+    else:
+        pipeline.bisection_mode = "envelope"
+    pipeline.bisection_ok = pipeline.bisection_mode == "exact"
+    return pipeline.bisection_ok
+
+
+def probe_lower_bound(pipeline: PipelineRuntime, bs: int, now: float) -> float:
+    """Cheap lower bound on probe(pipeline, bs, now).finish_time: the
+    contention-free chain that pays, per stage, the best-case transfer and
+    the stage latency with zero queueing wait.
+
+    Validity: probe()'s per-member finish only adds waits on top of exactly
+    these terms, and every member's transfer bandwidth min(upstream NIC,
+    member NIC) is <= min(max upstream NIC, max member NIC) — max of
+    pairwise mins equals min of maxes here because the max-NIC upstream node
+    paired with the max-NIC member realizes both maxima.  When the upstream
+    and stage pools share a node, a co-located path with zero transfer may
+    exist, so the bound charges no transfer at all.  The arithmetic uses the
+    same association order as probe() (`t + l_n` then `+ l_i`), so the bound
+    never exceeds the probed finish by float re-association.
+
+    Monotone non-decreasing in bs whenever every stage latency table is
+    (transfer time is linear in bs; IEEE add/divide preserve ordering).
+    O(stages) — no timeline walks."""
+    t = now
+    prev: StageRuntime | None = None
+    for stage in pipeline.stages:
+        l_i = stage.latency(bs)
+        in_bytes = stage.in_bytes_per_req
+        if prev is not None and in_bytes > 0:
+            up_ids, up_bw = prev._pool_info()
+            node_ids, bw_max = stage._pool_info()
+            if not (up_ids & node_ids):
+                bwm = up_bw if up_bw < bw_max else bw_max
+                t = t + in_bytes * bs / bwm
+        t = t + l_i
+        prev = stage
+    return t
+
+
+def probe_upper_envelope(pipeline: PipelineRuntime, bs: int, now: float) -> float:
+    """Monotone upper bound on probe(pipeline, bs, now).finish_time for
+    pipelines whose upstream pools span nodes (bisection_mode "envelope").
+
+    probe()'s finish fails to be monotone in bs only because the greedy
+    winner of stage i-1 can switch NODES as bs grows, changing the uplink
+    timeline and co-location pattern stage i sees.  This walk removes that
+    dependence: at each receiving stage it takes the MAX over every
+    candidate upstream node u of the stage-minimum finish computed as if the
+    batch arrived from u.  For fixed u, each member's finish is monotone in
+    (arrival, bs) — same slot/transfer arithmetic as probe() — so the
+    per-u minimum is monotone, the max over u is monotone, and the chained
+    arrival keeps the whole walk monotone by induction.  It dominates the
+    real probe because the real winner's node is one of the candidates and
+    the envelope arrival is >= the real arrival (induction again).
+
+    Within each fixed-u member scan the same zero-wait early exit as
+    probe() applies (the threshold is a lower bound on every member's
+    finish for that u, and only the min VALUE is needed here).  Cost:
+    O(stages x upstream_nodes x pool) timeline walks worst case, paid
+    O(log B) times per gated search instead of O(B) exact probes."""
+    t_g = now
+    prev: StageRuntime | None = None
+    for stage in pipeline.stages:
+        l_i = stage.latency(bs)
+        in_bytes = stage.in_bytes_per_req
+        if prev is None or in_bytes <= 0:
+            # no transfer: identical to probe()'s stage-min at arrival t_g
+            threshold = t_g + l_i
+            best = INF
+            for gpu in stage.vdevs:
+                s = gpu.timeline.earliest_slot(t_g, l_i)
+                finish = s + l_i
+                if finish < best:
+                    best = finish
+                    if finish <= threshold:
+                        break
+            t_g = best
+        else:
+            node_ids, bw_max = stage._pool_info()
+            worst = -INF
+            seen: set[int] = set()
+            for up in prev.vdevs:
+                up_node = up.node
+                if id(up_node) in seen:
+                    continue
+                seen.add(id(up_node))
+                up_bw = up_node.nic_bw
+                ul = up_node.uplink
+                if id(up_node) in node_ids:
+                    threshold = t_g + l_i
+                else:
+                    bwm = up_bw if up_bw < bw_max else bw_max
+                    threshold = (t_g + in_bytes * bs / bwm) + l_i
+                best = INF
+                for gpu in stage.vdevs:
+                    t = t_g
+                    gpu_node = gpu.node
+                    bw = up_bw if up_bw < gpu_node.nic_bw else gpu_node.nic_bw
+                    l_n = in_bytes * bs / bw
+                    if up_node is gpu_node:
+                        l_n = 0.0
+                    if l_n > 0:
+                        s = earliest_slot_multi([ul, gpu_node.downlink], t, l_n)
+                        t = s + l_n
+                    s = gpu.timeline.earliest_slot(t, l_i)
+                    finish = s + l_i
+                    if finish < best:
+                        best = finish
+                        if finish <= threshold:
+                            break
+                if best > worst:
+                    worst = best
+            t_g = worst
+        prev = stage
+    return t_g
 
 
 def probe(pipeline: PipelineRuntime, bs: int, now: float) -> ProbeResult:

@@ -14,9 +14,11 @@ Step 2 reuses Step 1's unified-batch probe instead of re-probing, drop
 storms stop re-probing every pipeline per popped request, and the
 last-moment shrink re-uses any batch size the search already priced.  The
 batch-size search itself bisects in O(log B) when `validate_bisection`
-proved finish_time monotone in bs for the pipeline, and falls back to the
-reference linear scan otherwise — every path is decision-identical to the
-frozen pre-optimization copy in `core/_reference.py`, enforced by
+proved finish_time monotone in bs for the pipeline ("exact" mode), bisects
+the monotone envelope bounds and exact-probes only the ambiguous band when
+pools span hosts ("envelope" mode, DESIGN.md section 11), and falls back to
+the reference linear scan otherwise — every path is decision-identical to
+the frozen pre-optimization copy in `core/_reference.py`, enforced by
 tests/test_sched_equivalence.py.
 """
 
@@ -25,7 +27,15 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
-from .reservation import INF, PipelineRuntime, ProbeResult, probe, reserve
+from .reservation import (
+    INF,
+    PipelineRuntime,
+    ProbeResult,
+    probe,
+    probe_lower_bound,
+    probe_upper_envelope,
+    reserve,
+)
 from .runtime import ClusterRuntime
 from .types import Request
 
@@ -57,6 +67,13 @@ class SchedulerStats:
     probe_cache_hits: int = 0
     # Step-2 searches resolved by bisection instead of the linear scan
     bisect_searches: int = 0
+    # Step-2 searches resolved by the envelope-bounded bisection (pools span
+    # hosts: bisect monotone bounds, exact-probe only the ambiguous band)
+    envelope_searches: int = 0
+    # bound evaluations (probe_upper_envelope + probe_lower_bound calls)
+    # paid by envelope searches — NOT exact probes, kept out of probe_calls
+    # so probe-count parity with the reference stays meaningful
+    envelope_bound_evals: int = 0
 
     @property
     def probes_per_dispatch(self) -> float:
@@ -109,6 +126,17 @@ class ReservationScheduler:
             self.stats.probe_cache_hits += 1
         return r
 
+    def _envelope_cached(self, cache: dict, p: PipelineRuntime, bs: int,
+                         now: float) -> float:
+        # bound values share the probe memo dict under a tagged key; same
+        # invalidation discipline (cleared at reserve()).
+        key = ("env", p.pipeline_id, bs)
+        v = cache.get(key)
+        if v is None:
+            v = cache[key] = probe_upper_envelope(p, bs, now)
+            self.stats.envelope_bound_evals += 1
+        return v
+
     def schedule(self, model: str, now: float) -> list[Dispatch | Drop | WaitUntil]:
         """Run Algorithm 1 until the queue cannot make progress at `now`."""
         out: list[Dispatch | Drop | WaitUntil] = []
@@ -155,6 +183,44 @@ class ReservationScheduler:
                         # lo was only ever set by a feasible probe: cached
                         chosen_bs = lo
                         chosen_r = cache[(p.pipeline_id, lo)]
+                elif p.bisection_mode == "envelope":
+                    # Pools span hosts: finish(bs) is not provably monotone,
+                    # but it is sandwiched between two monotone bounds.
+                    # Bisect the upper envelope for a feasibility FLOOR a
+                    # (every bs <= a with env(bs) <= deadline is provably
+                    # feasible), bisect the lower bound for a CEILING b
+                    # (every bs > b is provably infeasible), then exact-probe
+                    # the ambiguous band (a, b] largest-first — the first
+                    # feasible probe is exactly the linear scan's answer,
+                    # else the answer is a.  See DESIGN.md section 11.
+                    stats.envelope_searches += 1
+                    lo, hi = 0, p.unified_batch - 1
+                    while lo < hi:
+                        mid = (lo + hi + 1) // 2
+                        if self._envelope_cached(cache, p, mid, now) <= deadline:
+                            lo = mid
+                        else:
+                            hi = mid - 1
+                    floor_bs = lo
+                    lo, hi = floor_bs, p.unified_batch - 1
+                    while lo < hi:
+                        mid = (lo + hi + 1) // 2
+                        stats.envelope_bound_evals += 1
+                        if probe_lower_bound(p, mid, now) <= deadline:
+                            lo = mid
+                        else:
+                            hi = mid - 1
+                    ceil_bs = lo
+                    for bs in range(ceil_bs, floor_bs, -1):
+                        r = self._probe_cached(cache, p, bs, now)
+                        if r.finish_time <= deadline:
+                            chosen_bs, chosen_r = bs, r
+                            break
+                    if chosen_bs == 0 and floor_bs > 0:
+                        # provably feasible by env(floor_bs) <= deadline; the
+                        # exact probe supplies the dispatch reservations
+                        chosen_bs = floor_bs
+                        chosen_r = self._probe_cached(cache, p, floor_bs, now)
                 else:
                     # linear fallback: correctness never depends on
                     # profiling artifacts (non-monotone measured tables)

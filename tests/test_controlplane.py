@@ -4,6 +4,7 @@ re-planning with live DataPlane.swap_plan."""
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
 
 from repro.controlplane import (
     Objective,
@@ -138,13 +139,17 @@ def test_planner_facade_validates_and_records_result():
     assert plan.throughput <= planner.last_result.lp_upper_bound * (1 + 1e-6)
 
 
-def test_planner_rejects_unknown_backend_and_multimodel_milp():
+def test_planner_rejects_unknown_backend_and_solves_multimodel_milp():
     with pytest.raises(ValueError, match="unknown backend"):
         Planner(backend="simplex")
-    profs = {f"m{i}": _profile(seed=i, name=f"m{i}") for i in range(2)}
+    # the literal MILP backend accepts multi-model workloads (min-normalized-
+    # throughput objective) instead of rejecting them
+    profs = {f"m{i}": _profile(seed=i, name=f"m{i}", n_blocks=3) for i in range(2)}
     tables = {k: _table(v) for k, v in profs.items()}
-    with pytest.raises(ValueError, match="single-model"):
-        Planner(backend="milp").plan(profs, tables, CLUSTER)
+    planner = Planner(backend="milp",
+                      objective=Objective(max_partitions=2, slo_margin=0.4))
+    plan = planner.plan(profs, tables, CLUSTER)
+    assert all(plan.throughput_of(m) > 0 for m in profs)
 
 
 def test_deprecated_core_shims_resolve_and_warn():
@@ -435,3 +440,107 @@ def test_replan_loop_triggers_on_mix_drift_and_improves_fit():
     assert new_plan.throughput_of("m1") > plan0.throughput_of("m1") - 1e-9
     ev = loop.events[0]
     assert ev.weights["m1"] > ev.weights["m0"]
+
+
+# ---------------------------------------------------------------------------
+# Warm-started re-solves (exactness-preserving by construction)
+# ---------------------------------------------------------------------------
+
+
+def _min_norm(plan, weights):
+    return min(plan.throughput_of(m) / w for m, w in weights.items())
+
+
+def _warm_testbed(seed):
+    profs = {f"m{i}": _profile(seed=seed + i, name=f"m{i}", n_blocks=3)
+             for i in range(2)}
+    tables = {k: _table(v) for k, v in profs.items()}
+    return profs, tables
+
+
+def _assert_warm_matches_cold(seed, w1, w2):
+    """Solve at weights w1, re-solve at w2 warm (incumbent + template cache)
+    and cold; the warm objective must dominate the re-priced incumbent and
+    equal the cold optimum (the gap the cutoff closes is zero)."""
+    profs, tables = _warm_testbed(seed)
+    cold = Planner(warm_start=False,
+                   objective=Objective(max_partitions=2))
+    warm = Planner(objective=Objective(max_partitions=2))
+
+    inc = warm.plan(profs, tables, CLUSTER,
+                    objective=warm.objective.with_weights(w1))
+    warm_plan = warm.plan(profs, tables, CLUSTER,
+                          objective=warm.objective.with_weights(w2),
+                          incumbent=inc)
+    cold_plan = cold.plan(profs, tables, CLUSTER,
+                          objective=cold.objective.with_weights(w2))
+
+    # warm >= the incumbent re-priced under the new weights...
+    assert _min_norm(warm_plan, w2) >= _min_norm(inc, w2) * (1 - 1e-9)
+    # ...and == the cold optimum: warm starting never costs exactness
+    assert _min_norm(warm_plan, w2) == pytest.approx(
+        _min_norm(cold_plan, w2), rel=1e-9)
+    info = warm.last_result.warm
+    assert info is not None and info["template_cache_hits"] == len(profs)
+    return info
+
+
+def test_warm_start_equals_cold_optimum_and_dominates_incumbent():
+    infos = [
+        _assert_warm_matches_cold(0, {"m0": 1.0, "m1": 1.0},
+                                  {"m0": 2.0, "m1": 1.0}),
+        _assert_warm_matches_cold(3, {"m0": 0.5, "m1": 1.5},
+                                  {"m0": 1.5, "m1": 0.5}),
+        _assert_warm_matches_cold(7, {"m0": 1.0, "m1": 3.0},
+                                  {"m0": 1.0, "m1": 3.0}),
+    ]
+    # at least one of the re-solves must have actually seeded the solver
+    # (identical-weights case: the incumbent IS optimal and representable)
+    assert any(i["incumbent_columns"] > 0 and i["cutoff"] is not None
+               for i in infos)
+
+
+def test_warm_start_milp_backend_cutoff_preserves_optimum():
+    """The literal-MILP backend warm starts via objective cutoff only; the
+    optimum must be unchanged."""
+    profs = {f"m{i}": _profile(seed=1 + i, name=f"m{i}", n_blocks=2)
+             for i in range(2)}
+    tables = {k: _table(v) for k, v in profs.items()}
+    w = {"m0": 1.0, "m1": 2.0}
+    obj = Objective(weights=w, max_partitions=2)
+    cold = Planner(backend="milp", warm_start=False, objective=obj)
+    warm = Planner(backend="milp", objective=obj)
+    inc = warm.plan(profs, tables, CLUSTER)
+    warm_plan = warm.plan(profs, tables, CLUSTER, incumbent=inc)
+    cold_plan = cold.plan(profs, tables, CLUSTER)
+    assert _min_norm(warm_plan, w) >= _min_norm(inc, w) * (1 - 1e-9)
+    assert _min_norm(warm_plan, w) == pytest.approx(
+        _min_norm(cold_plan, w), rel=1e-9)
+
+
+def test_template_cache_hits_across_resizes_and_weights():
+    """The cache key excludes device counts, so a cluster resize or a mix
+    change reuses cached templates wholesale."""
+    profs, tables = _warm_testbed(5)
+    planner = Planner(objective=Objective(max_partitions=2))
+    planner.plan(profs, tables, CLUSTER)
+    assert planner.template_cache.misses == len(profs)
+    bigger = ClusterSpec(counts={"tpu-hi": 3, "tpu-lo": 6})
+    planner.plan(profs, tables, bigger,
+                 objective=planner.objective.with_weights(
+                     {"m0": 2.0, "m1": 1.0}))
+    assert planner.template_cache.misses == len(profs)  # no re-enumeration
+    assert planner.template_cache.hits == len(profs)
+    # a different latency table (re-profiled speed) must miss
+    t2 = {k: _table(_profile(seed=40 + i, name=k, n_blocks=3))
+          for i, k in enumerate(profs)}
+    planner.plan(profs, t2, CLUSTER)
+    assert planner.template_cache.misses == 2 * len(profs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), w0=st.floats(0.2, 3.0),
+       w1=st.floats(0.2, 3.0))
+def test_warm_start_exactness_property(seed, w0, w1):
+    _assert_warm_matches_cold(seed, {"m0": 1.0, "m1": 1.0},
+                              {"m0": w0, "m1": w1})

@@ -29,8 +29,24 @@ def _profile(n_layers=8, n_blocks=4, slo=0.03, seed=0, seq=256, name="m"):
 
 
 def _setup():
-    """Two models, two alternating plans (m0-heavy / m1-heavy) on one cluster."""
-    profs = {f"m{i}": _profile(seed=i, slo=0.03, name=f"m{i}") for i in range(2)}
+    """Two models, two alternating plans (m0-heavy / m1-heavy) on one cluster.
+
+    Each SLO is pinned between the two classes' whole-model latencies so the
+    optimal plans must partition (multi-stage pipelines).  The epoch
+    scenarios need this: only a stage priced AFTER a swap can slip relative
+    to its reservation, and single-stage pipelines price everything at
+    dispatch."""
+    from repro.core.types import replace
+
+    profs = {}
+    for i in range(2):
+        p = _profile(seed=i, slo=1.0, name=f"m{i}")
+        tbl = cm.build_latency_table(p, CLUSTER, vfracs=(1, 2),
+                                     batch_sizes=(1, 2))
+        whole_lo = tbl.partition(0, p.n_blocks, "tpu-lo", 1, 1)
+        whole_hi = tbl.partition(0, p.n_blocks, "tpu-hi", 1, 1)
+        slo = (whole_hi * 1.4 + whole_lo * 0.6) / 2 / 0.6
+        profs[f"m{i}"] = replace(p, slo_s=slo)
     store = ProfileStore(CLUSTER, vfracs=(1, 2), batch_sizes=(1, 2))
     for p in profs.values():
         store.add(p, cm.build_latency_table(p, CLUSTER, vfracs=(1, 2),

@@ -122,3 +122,75 @@ def test_ppipe_beats_baselines_under_tight_slo():
     dart = plan_dart_r({"m": prof}, {"m": tbl}, CLUSTER)
     assert pp.plan.throughput >= np_.plan.throughput - 1e-6
     assert pp.plan.throughput >= dart.plan.throughput - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Multi-model literal MILP vs enumeration (PR: control plane at scale)
+# ---------------------------------------------------------------------------
+
+CLUSTER16 = ClusterSpec(counts={"tpu-hi": 4, "tpu-lo": 12})
+
+
+def _min_norm(plan, weights):
+    return min(plan.throughput_of(m) / w for m, w in weights.items())
+
+
+def _two_model_testbed(n_blocks=(2, 3)):
+    profs = {
+        "det": _profile(seed=3, n_blocks=n_blocks[0], name="det"),
+        "cls": _profile(seed=4, n_blocks=n_blocks[1], name="cls"),
+    }
+    tbls = {k: cm.build_latency_table(v, CLUSTER16, vfracs=(1, 2),
+                                      batch_sizes=(1, 2))
+            for k, v in profs.items()}
+    return profs, tbls
+
+
+def test_multi_model_milp_whole_chips_matches_enumeration_exactly():
+    """On the 16-chip testbed the literal multi-model MILP restricted to the
+    enumerator's feasible set (whole_chips=True) must agree with the
+    template enumeration + master ILP to float precision — the cross-check
+    that certifies the multi-model objective/indexing."""
+    from repro.controlplane import plan_cluster as plan_cluster_cp, solve_milp_multi
+
+    profs, tbls = _two_model_testbed()
+    weights = {"det": 1.0, "cls": 2.0}
+    lit = solve_milp_multi(profs, tbls, CLUSTER16, weights=weights,
+                           slo_margin=0.4, max_partitions=2,
+                           time_limit_s=60.0, whole_chips=True)
+    enum = plan_cluster_cp(profs, tbls, CLUSTER16, weights=weights,
+                           slo_margin=0.4, max_partitions=2).plan
+    assert _min_norm(lit, weights) == pytest.approx(
+        _min_norm(enum, weights), rel=1e-9)
+    for plan in (lit, enum):
+        plan.validate({k: v for k, v in profs.items()}, slo_margin=0.4)
+        assert all(plan.throughput_of(m) > 0 for m in profs)
+
+
+def test_multi_model_milp_fractional_dominates_whole_chips():
+    """The paper-literal fractional budget (g/v chips) relaxes the
+    enumerator's whole-chip packing, so its optimum can only be >=."""
+    from repro.controlplane import solve_milp_multi
+
+    profs, tbls = _two_model_testbed(n_blocks=(2, 2))
+    weights = {"det": 1.0, "cls": 1.0}
+    frac = solve_milp_multi(profs, tbls, CLUSTER16, weights=weights,
+                            slo_margin=0.4, max_partitions=2,
+                            time_limit_s=60.0)
+    whole = solve_milp_multi(profs, tbls, CLUSTER16, weights=weights,
+                             slo_margin=0.4, max_partitions=2,
+                             time_limit_s=60.0, whole_chips=True)
+    assert _min_norm(frac, weights) >= _min_norm(whole, weights) - 1e-9
+
+
+def test_single_model_wrapper_unchanged_by_multi_path():
+    """solve_milp is now a thin wrapper over solve_milp_multi; the
+    single-model optimum must still match enumeration (regression guard for
+    the rewrite)."""
+    prof = _profile(n_layers=6, n_blocks=3, slo=0.02)
+    tbl = _table(prof)
+    lit = solve_milp(prof, tbl, CLUSTER, slo_margin=0.4, max_partitions=2,
+                     time_limit_s=30.0, whole_chips=True)
+    enum = plan_cluster({"m": prof}, {"m": tbl}, CLUSTER, slo_margin=0.4,
+                        max_partitions=2)
+    assert lit.throughput == pytest.approx(enum.plan.throughput, rel=1e-9)

@@ -288,3 +288,103 @@ def test_sustained_shift_still_replans_through_the_gate():
     # the re-solved plan leans into the sustained mix
     assert loop.dataplane.rt.plan.throughput_of("m1") >= \
         plan.throughput_of("m1") - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Per-class capacity pools vs the scalar exchange rate (regression)
+# ---------------------------------------------------------------------------
+
+
+HET_CLUSTER = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 8})
+
+
+def _het_profile(seed, name, mlp_lo, mlp_hi, n_layers=8, slo=0.03, seq=256):
+    rng = np.random.default_rng(seed)
+    layers = [cm.embed_cost(seq, 1024, 32000)]
+    for i in range(n_layers):
+        layers.append(cm.layer_sequence_cost(f"l{i}", [
+            cm.attention_cost(seq, 1024, 16, 4),
+            cm.mlp_cost(seq, 1024, int(rng.uniform(mlp_lo, mlp_hi))),
+        ]))
+    layers.append(cm.head_cost(seq, 1024, 32000))
+    return blocks.build_profile(name, layers, slo, n_blocks=4)
+
+
+def _het_setup():
+    """Scarce fast class + plentiful slow class, one compute-heavy model
+    (steep tpu-lo penalty) and one light model: the shape where a single
+    best-case exchange rate prices both models off the same scarce pool."""
+    profs = {
+        "m0": _het_profile(0, "m0", 7000, 8192),   # compute-heavy
+        "m1": _het_profile(1, "m1", 2048, 3000),   # light
+    }
+    store = _store(profs, HET_CLUSTER)
+    planner = Planner(objective=Objective(slo_margin=0.4, max_partitions=2))
+    plan = planner.plan(profs, store.tables(), HET_CLUSTER,
+                        objective=planner.objective.with_weights(
+                            {"m0": 0.1, "m1": 0.9}))
+    return profs, store, planner, plan
+
+
+def test_request_cost_by_class_rates_and_scalar_consistency():
+    _, store, _, _ = _het_setup()
+    for m in ("m0", "m1"):
+        by_class = store.request_cost_by_class(m)
+        assert set(by_class) == set(HET_CLUSTER.classes)
+        assert all(c > 0.0 for c in by_class.values())
+        # the scalar exchange rate is exactly the best class
+        assert store.request_cost(m) == min(by_class.values())
+    # the compute-heavy model pays a steeper lite-class premium
+    r0 = store.request_cost_by_class("m0")
+    r1 = store.request_cost_by_class("m1")
+    assert r0["tpu-lo"] / r0["tpu-hi"] > r1["tpu-lo"] / r1["tpu-hi"] * 1.05
+
+
+def test_gate_verdicts_track_solver_outcomes_on_heterogeneous_mixes():
+    """Replay logged heterogeneous mixes against the solver's ACTUAL goodput
+    outcome: the per-class estimator must track the truth on every mix, and
+    on at least one mix the legacy scalar gate misfires (accepts a re-solve
+    that cannot pay for itself) where the per-class gate matches the truth.
+    """
+    from repro.controlplane import estimate_benefit_scalar
+
+    profs, store, planner, plan0 = _het_setup()
+    total = plan0.throughput
+    attain0 = lambda rates: sum(  # noqa: E731
+        min(rates[m], plan0.throughput_of(m)) for m in profs)
+
+    logged = []  # (rates, benefit_lp, benefit_scalar, actual_gain)
+    gate = ReplanPolicy()
+    for frac0 in (0.3, 0.5, 0.7, 0.9):
+        rates = {"m0": total * frac0, "m1": total * (1 - frac0)}
+        b_lp = gate.estimate_benefit(rates, plan0, store)
+        b_sc = estimate_benefit_scalar(rates, plan0, store)
+        plan1 = planner.plan(profs, store.tables(), HET_CLUSTER,
+                             objective=planner.objective.with_weights(rates))
+        actual = max(0.0, sum(min(rates[m], plan1.throughput_of(m))
+                              for m in profs) - attain0(rates))
+        logged.append((rates, b_lp, b_sc, actual))
+
+    # (1) the per-class estimate is strictly closer to the solver's actual
+    #     outcome than the scalar one, on every logged mix
+    for _, b_lp, b_sc, actual in logged:
+        assert abs(b_lp - actual) < abs(b_sc - actual)
+
+    # (2) regression: a threshold between the two estimates exposes the
+    #     scalar misfire.  At the mildest drift the re-solve's true gain is
+    #     below the priced bar, the scalar gate still opens, and the
+    #     per-class gate (via the real consider() path) correctly holds.
+    rates, b_lp, b_sc, actual = logged[0]
+    required = 0.5 * (b_lp + b_sc)
+    assert actual < required, "re-solve genuinely not worth this bar"
+    assert b_sc > required, "legacy scalar gate misfires (accepts)"
+    cfg = PolicyConfig(cost_ewma=0.0, cooldown_s=0.0, amortize_s=4.0,
+                       solver_wall_init_s=required * 4.0 / sum(rates.values()))
+    d = ReplanPolicy(cfg).consider(0.0, rates, plan0, store)
+    assert not d.accepted and d.reason == "marginal"
+
+    # (3) same bar, strong drift: gain is real and the gate opens
+    rates, b_lp, b_sc, actual = logged[-1]
+    assert actual > required and b_lp > required
+    d = ReplanPolicy(cfg).consider(0.0, rates, plan0, store)
+    assert d.accepted and d.reason == "gain"

@@ -34,6 +34,8 @@ from repro.core.reservation import (
     VDevRes,
     earliest_slot_multi,
     probe,
+    probe_lower_bound,
+    probe_upper_envelope,
     validate_bisection,
 )
 from repro.core.runtime import ClusterRuntime
@@ -48,7 +50,7 @@ from repro.core.types import Request
 
 def _rand_runtime(seed, *, tie_heavy=False, non_monotone=False,
                   fragment=False, shared_nodes=False, single_node_pools=False,
-                  n_models=1):
+                  multi_host=False, n_models=1):
     rng = np.random.default_rng(seed)
     rt = ClusterRuntime(cluster=None, plan=None)
 
@@ -76,6 +78,14 @@ def _rand_runtime(seed, *, tie_heavy=False, non_monotone=False,
                     nodes = [node] * n_members
                 elif shared_nodes:
                     nodes = [shared_pool[int(rng.integers(len(shared_pool)))]
+                             for _ in range(n_members)]
+                elif multi_host:
+                    # pool spans a few hosts, several members per host NIC —
+                    # the chips_per_host > 1 topology build_runtime produces
+                    # once a class pool outgrows one host
+                    k = int(rng.integers(2, 4))
+                    stage_nodes = [new_node() for _ in range(k)]
+                    nodes = [stage_nodes[int(rng.integers(k))]
                              for _ in range(n_members)]
                 else:
                     nodes = [new_node() for _ in range(n_members)]
@@ -249,7 +259,8 @@ def test_equivalence_fragmented_timelines():
 
 def test_equivalence_shared_nodes_coloc():
     """Stages sharing nodes: co-location zeroes transfers member-by-member
-    and the bisection gate must stay OFF (multi-node upstream pools)."""
+    and exact bisection must stay OFF (multi-node upstream pools) — the
+    envelope-gated search handles these."""
     for seed in range(6):
         _assert_equivalent(seed, shared_nodes=True, fragment=seed % 2 == 0)
 
@@ -285,15 +296,43 @@ def test_probe_memoization_reduces_probes():
     assert st_opt.probes_per_dispatch <= st_ref.probes_per_dispatch
 
 
+def test_equivalence_multi_host_pools_envelope_exercised():
+    """Pools spanning hosts with several members per host NIC — the topology
+    the envelope gate exists for.  The gated O(log B) search must actually
+    engage (not silently fall back to the linear scan) and the decision
+    stream must stay bit-for-bit identical to the reference."""
+    total, env_pipelines = 0, 0
+    for seed in range(8):
+        rt = _rand_runtime(seed, multi_host=True)
+        env_pipelines += sum(p.bisection_mode == "envelope"
+                             for p in rt.pipelines)
+        _, st_opt = _assert_equivalent(seed, multi_host=True, load=2.0)
+        total += st_opt.envelope_searches
+    assert env_pipelines > 0
+    assert total > 0
+
+
+def test_envelope_exercised_on_default_random_runtimes():
+    """The default randomized runtimes (one node per member) put every
+    multi-member upstream pool in envelope mode; under pressure the envelope
+    search must carry real traffic."""
+    total = 0
+    for seed in range(6):
+        _, st_opt = _assert_equivalent(seed, load=2.0)
+        total += st_opt.envelope_searches
+    assert total > 0
+
+
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 10_000), tie_heavy=st.booleans(),
        fragment=st.booleans(), shared=st.booleans(),
-       non_monotone=st.booleans(), load=st.floats(0.3, 3.0))
+       non_monotone=st.booleans(), multi_host=st.booleans(),
+       load=st.floats(0.3, 3.0))
 def test_equivalence_property(seed, tie_heavy, fragment, shared,
-                              non_monotone, load):
+                              non_monotone, multi_host, load):
     _assert_equivalent(seed, tie_heavy=tie_heavy, fragment=fragment,
                        shared_nodes=shared, non_monotone=non_monotone,
-                       load=load)
+                       multi_host=multi_host, load=load)
 
 
 # ---------------------------------------------------------------------------
@@ -425,17 +464,54 @@ def _mini_pipeline(lat2=None, two_prev_nodes=False, in_bytes=1e5):
 
 
 def test_validate_bisection_gate():
-    assert validate_bisection(_mini_pipeline()) is True
+    p = _mini_pipeline()
+    assert validate_bisection(p) is True
+    assert p.bisection_mode == "exact"
     # non-monotone measured table -> linear fallback
-    assert validate_bisection(_mini_pipeline(lat2={1: 1.0, 2: 0.4})) is False
+    p = _mini_pipeline(lat2={1: 1.0, 2: 0.4})
+    assert validate_bisection(p) is False
+    assert p.bisection_mode == "linear"
     # multi-node upstream pool feeding a transfer -> path switching can
-    # break composed monotonicity -> linear fallback
-    assert validate_bisection(_mini_pipeline(two_prev_nodes=True)) is False
+    # break composed monotonicity -> exact bisection stays off, but the
+    # monotone envelope bounds still admit a gated search
+    p = _mini_pipeline(two_prev_nodes=True)
+    assert validate_bisection(p) is False
+    assert p.bisection_mode == "envelope"
     # ...but with no transfer the upstream pool shape is irrelevant
-    assert validate_bisection(
-        _mini_pipeline(two_prev_nodes=True, in_bytes=0.0)) is True
+    p = _mini_pipeline(two_prev_nodes=True, in_bytes=0.0)
+    assert validate_bisection(p) is True
+    assert p.bisection_mode == "exact"
     # default (never validated) is the safe fallback
     assert _mini_pipeline().bisection_ok is False
+    assert _mini_pipeline().bisection_mode == "linear"
+
+
+def test_envelope_bounds_bracket_probe_and_are_monotone():
+    """The gated search is sound iff probe_lower_bound <= finish <=
+    probe_upper_envelope at every batch size and both bounds are monotone
+    in bs.  Checked pointwise on randomized (fragmented, host-spanning)
+    runtimes against the real probe()."""
+    for seed in range(10):
+        cfg = {"fragment": True}
+        if seed % 3 == 0:
+            cfg["multi_host"] = True
+        elif seed % 3 == 1:
+            cfg["shared_nodes"] = True
+        rt = _rand_runtime(seed, **cfg)
+        rng = np.random.default_rng(seed + 17)
+        for p in rt.pipelines:
+            for _ in range(3):
+                now = float(rng.uniform(0.0, 0.3))
+                lows, highs = [], []
+                for bs in range(1, p.unified_batch + 1):
+                    lo = probe_lower_bound(p, bs, now)
+                    hi = probe_upper_envelope(p, bs, now)
+                    fin = probe(p, bs, now).finish_time
+                    assert lo <= fin <= hi
+                    lows.append(lo)
+                    highs.append(hi)
+                assert lows == sorted(lows)
+                assert highs == sorted(highs)
 
 
 def test_lat_scale_preserves_bisection_validity():
