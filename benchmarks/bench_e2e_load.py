@@ -57,6 +57,7 @@ HORIZON_S = 8.0
 BENCH_JSON = Path("BENCH_e2e.json")
 OBS_TRACE_JSON = Path("BENCH_obs_trace.json")
 OBS_WINDOWS_JSON = Path("BENCH_obs_windows.json")
+BENCH_STREAM_JSON = Path("BENCH_stream.json")
 
 
 def _config(cluster, archs, **overrides) -> ServeConfig:
@@ -431,6 +432,179 @@ def run_obs(cluster_name="HC1-S", quick=False, seed=0, reps=3):
     }
 
 
+def _journal_integrity(journal, tel, trace_level=True) -> list[str]:
+    """Referential-integrity audit of a serve's decision journal: every
+    dispatched/completed/dropped req_id must trace back to a `req.arrive`
+    event, the arrive count must equal the outcome count, and the
+    `admit.shed`/`admit.resume` backpressure edges must strictly alternate
+    per model starting with shed.  Returns violation strings (CI asserts
+    the list is empty).  Per-request closure is only auditable at obs level
+    "trace" (aggregate journals carry no req.* events — the --full soak's
+    regime); the admit-edge alternation check runs at every level."""
+    violations: list[str] = []
+    arrived = {e["req_id"] for e in journal.select(kind="req.arrive")}
+    if trace_level:
+        if len(arrived) != len(tel.outcomes):
+            violations.append(f"arrive events {len(arrived)} != outcomes "
+                              f"{len(tel.outcomes)}")
+        for ev in journal.select(kind="batch.dispatch"):
+            ghosts = [r for r in ev["req_ids"] if r not in arrived]
+            if ghosts:
+                violations.append(
+                    f"batch {ev['batch_id']} dispatches unknown req_ids "
+                    f"{ghosts[:3]}")
+        for kind in ("req.complete", "req.drop"):
+            for ev in journal.select(kind=kind):
+                if ev["req_id"] not in arrived:
+                    violations.append(
+                        f"{kind} for unknown req_id {ev['req_id']}")
+    last_edge: dict[str, str] = {}
+    for ev in journal.events:
+        if ev["kind"] not in ("admit.shed", "admit.resume"):
+            continue
+        prev = last_edge.get(ev["model"])
+        want = ("admit.shed" if prev in (None, "admit.resume")
+                else "admit.resume")
+        if ev["kind"] != want:
+            violations.append(f"admit edge order broken for {ev['model']}: "
+                              f"{prev} -> {ev['kind']}")
+        last_edge[ev["model"]] = ev["kind"]
+    return violations
+
+
+def run_stream(cluster_name="HC1-S", quick=False, seed=0):
+    """Soak: open-loop continuous streaming through `Session.serve`, static
+    plan vs online re-planning under a sustained diurnal mix drift.
+
+    The workload is a declarative two-camera `SourceConfig` (the same blob a
+    production config would carry): a flash-crowd feed for model A and a
+    diurnal feed for model B, out of phase, with the diurnal period spanning
+    twice the horizon — so within one serve the mix drifts from A-dominant
+    to B-dominant once and stays (the continuous analogue of run_drift's
+    mid-trace flip).  The static session keeps the plan solved for the
+    t=0 instantaneous mix; the re-planned session tracks the drift.  Both
+    serve the bit-identical arrival stream (seed-determinism of
+    `repro.stream`; nothing is materialized — `serve` pulls arrivals
+    incrementally, which is what makes the --full hour of virtual time
+    affordable in memory).
+
+    Asserts (the CI soak gate): re-planned attainment >= static, and zero
+    referential-integrity violations in the decision journal
+    (`_journal_integrity`).  Under --quick the journal runs at level
+    "trace" (per-request events audited); --full drops to "aggregate" to
+    keep the hour-long journal bounded.
+
+    Emits per-window attainment for both sessions (window 1 s quick / 10 s
+    full) plus the cumulative-so-far series that open-ended serving adds to
+    `WindowedMetrics.series`.
+    """
+    from repro.api import AdmissionPolicy, ObsConfig, SourceConfig
+
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS["G1"][:2]
+    horizon = 120.0 if quick else 3600.0
+    period = 2.0 * horizon
+    window_s = 1.0 if quick else 10.0
+    amp = 0.7
+    base_cfg = _config(
+        cluster, archs,
+        admission=AdmissionPolicy(high_watermark=48, low_watermark=12),
+        obs=ObsConfig(level="trace" if quick else "aggregate",
+                      window_s=window_s),
+    )
+    s0 = Session.from_config(base_cfg)
+    store = s0.profile()
+    mix = dict(zip(archs, [0.65, 0.35]))
+    # instantaneous mix at t=0: A at its diurnal peak, B at its trough —
+    # the static plan is solved for THIS mix, so the drift strands it
+    inst = {archs[0]: mix[archs[0]] * (1 + amp),
+            archs[1]: mix[archs[1]] * (1 - amp)}
+    w0 = {m: v / sum(inst.values()) for m, v in inst.items()}
+    plan0 = s0.solve(objective=Objective(slo_margin=0.4).with_weights(w0))
+    # capacity yardstick: what a plan solved at the long-run MEAN mix
+    # sustains — 0.6x keeps both phases of the swing near saturation
+    plan_mean = s0.solve(
+        objective=Objective(slo_margin=0.4).with_weights(mix))
+    rate = plan_mean.throughput * 0.6
+    stream = SourceConfig(kind="multi_camera", cameras=(
+        SourceConfig(kind="flash", model=archs[0],
+                     rate_rps=rate * mix[archs[0]], period_s=period,
+                     amplitude=amp, phase_s=period / 4, flash_mult=3.0,
+                     flash_s=2.0, mean_flash_interval_s=15.0, seed=seed + 1),
+        SourceConfig(kind="diurnal", model=archs[1],
+                     rate_rps=rate * mix[archs[1]], period_s=period,
+                     amplitude=amp, phase_s=3 * period / 4, seed=seed + 2),
+    ))
+
+    def serve(replan: bool):
+        cfg = base_cfg
+        if replan:
+            cfg = dataclasses.replace(
+                base_cfg,
+                replan=ReplanConfig(window_s=2.0, check_interval_s=1.0,
+                                    min_requests=50, source="analytic"),
+                # pinned solver cost: gate verdicts (and the soak's
+                # attainment numbers) stay independent of host speed
+                replan_policy=PolicyConfig(cooldown_s=8.0,
+                                           solver_wall_init_s=0.5,
+                                           cost_ewma=0.0),
+            )
+        session = Session.from_config(cfg, store=store)
+        session.use_plan(plan0)
+        session.deploy(mode="sim")
+        if replan:
+            session.enable_replanning(
+                baseline_rates={m: rate * w0[m] for m in archs})
+        source = session.build_source(stream)
+        t0 = time.perf_counter()
+        report = session.serve(source, horizon_s=horizon)
+        return report, time.perf_counter() - t0
+
+    rep_static, wall_static = serve(replan=False)
+    rep_replan, wall_replan = serve(replan=True)
+    tel_s, tel_r = rep_static.telemetry, rep_replan.telemetry
+
+    # ---- the soak gates -------------------------------------------------
+    assert tel_r.attainment >= tel_s.attainment - 1e-12, (
+        f"re-planned attainment {tel_r.attainment:.4f} fell below static "
+        f"{tel_s.attainment:.4f} under sustained drift")
+    violations = (
+        _journal_integrity(rep_static.obs.journal, tel_s, trace_level=quick)
+        + _journal_integrity(rep_replan.obs.journal, tel_r,
+                             trace_level=quick))
+    assert not violations, f"journal integrity: {violations[:5]}"
+
+    ts_s, ts_r = rep_static.timeseries(), rep_replan.timeseries()
+    admit_edges = [e for e in rep_replan.obs.journal.events
+                   if e["kind"].startswith("admit.")]
+    return {
+        "cluster": cluster_name,
+        "models": archs,
+        "stream_config": dataclasses.asdict(stream),
+        "rate_rps": rate,
+        "horizon_s": horizon,
+        "period_s": period,
+        "window_s": window_s,
+        "watermarks": {"high": 48, "low": 12},
+        "n_requests": len(tel_s.outcomes),
+        "static": {**_tel_detail(tel_s), "wall_s": wall_static,
+                   "drops": tel_s.snapshot()["drops"]},
+        "replanned": {**_tel_detail(tel_r), "wall_s": wall_replan,
+                      "decisions": len(tel_r.replan_decisions),
+                      "drops": tel_r.snapshot()["drops"]},
+        "delta_attainment": tel_r.attainment - tel_s.attainment,
+        "attainment_by_window": {"static": ts_s["attainment"],
+                                 "replanned": ts_r["attainment"]},
+        "cumulative_final": {
+            "static": {k: v[-1] for k, v in ts_s["cumulative"].items()},
+            "replanned": {k: v[-1] for k, v in ts_r["cumulative"].items()},
+        },
+        "backpressure_events": len(tel_r.backpressure_events),
+        "admit_journal_events": len(admit_edges),
+        "journal_violations": violations,  # asserted empty above
+    }
+
+
 def run_swap_measured(quick=False):
     """Measured-mode live plan swap to a DIFFERENT partitioning on the REAL
     execution path (closes the long-standing ROADMAP item 1): a calibrated
@@ -555,6 +729,19 @@ def run_swap_measured(quick=False):
     }
 
 
+def _stream_line(st):
+    return (
+        f"e2e_stream[{st['cluster']}|{'+'.join(st['models'])}],"
+        f"{(st['static']['wall_s'] + st['replanned']['wall_s'])*1e6:.0f},"
+        f"virtual_h={st['horizon_s']/3600:.2f};reqs={st['n_requests']};"
+        f"static_attain={st['static']['attainment']:.3f};"
+        f"replanned_attain={st['replanned']['attainment']:.3f};"
+        f"delta={st['delta_attainment']:+.3f};"
+        f"swaps={st['replanned']['plan_swaps']};"
+        f"journal_violations={len(st['journal_violations'])}"
+    )
+
+
 def _obs_line(obs):
     return (
         f"e2e_obs[{obs['cluster']}|{'+'.join(obs['models'])}],"
@@ -618,9 +805,11 @@ def main(quick=False, full=False):
     )
     obs = run_obs(quick=quick)
     out.append(_obs_line(obs))
+    stream = run_stream(quick=quick)
+    out.append(_stream_line(stream))
     payload = {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
                "rows": results, "drift": drift, "oscillation": osc,
-               "obs": obs}
+               "obs": obs, "stream": stream}
     if full:
         # paper-scale (100-device, 3-model) re-planning scenarios — gated
         # behind --full because they replay ~100k-request traces; affordable
@@ -672,11 +861,23 @@ if __name__ == "__main__":
                     help="run only the observability scenario (writes the "
                          "Perfetto/windows artifacts, leaves BENCH_e2e.json "
                          "untouched)")
+    ap.add_argument("--stream-only", action="store_true",
+                    help="run only the streaming soak (static vs re-planned "
+                         "serve of a diurnal+flash SourceConfig; asserts "
+                         "replanned >= static and journal integrity; writes "
+                         "BENCH_stream.json, leaves BENCH_e2e.json "
+                         "untouched)")
     ap.add_argument("--assert-obs-overhead", type=float, default=None,
                     metavar="FRAC",
                     help="exit non-zero if traced-mode overhead exceeds this "
                          "fraction of untraced scheduled-req/s (CI guard)")
     args = ap.parse_args()
+    if args.stream_only:
+        stream_result = run_stream(quick=args.quick)
+        BENCH_STREAM_JSON.write_text(json.dumps(stream_result, indent=2))
+        print(_stream_line(stream_result))
+        print(f"e2e_stream_json,0,wrote={BENCH_STREAM_JSON}")
+        sys.exit(0)
     if args.obs_only:
         obs_result = run_obs(quick=args.quick)
         print(_obs_line(obs_result))

@@ -30,6 +30,7 @@ from repro.controlplane.replan import PolicyConfig, ReplanConfig  # noqa: F401
 from repro.core.types import ClusterSpec  # noqa: F401
 from repro.dataplane.queues import AdmissionPolicy  # noqa: F401
 from repro.obs import ObsConfig  # noqa: F401
+from repro.stream import SourceConfig  # noqa: F401
 
 from .config import ConfigError, ModelSpec, ServeConfig  # noqa: F401
 from .session import (  # noqa: F401
@@ -63,4 +64,5 @@ __all__ = [
     "PolicyConfig",
     "AdmissionPolicy",
     "ObsConfig",
+    "SourceConfig",
 ]

@@ -26,6 +26,7 @@ from repro.core import costmodel as cm
 from repro.core.types import ACCEL_CLASSES, ClusterSpec
 from repro.dataplane.queues import AdmissionPolicy
 from repro.obs import ObsConfig
+from repro.stream.config import SourceConfig
 
 
 class ConfigError(ValueError):
@@ -107,6 +108,10 @@ class ServeConfig:
     # observability (repro.obs): level off|aggregate|trace, rolling-window
     # width, span sampling rate — off means no Observer is created at all
     obs: ObsConfig = field(default_factory=ObsConfig)
+    # open-loop arrival process (repro.stream) for Session.serve() when no
+    # explicit Source is passed; None means serve() requires one.  ("source"
+    # above predates this and names the ProfileStore pricing tables.)
+    stream: SourceConfig | None = None
     # latency-table axes (ProfileStore): defaults are the paper's grids
     vfracs: tuple[int, ...] = cm.VFRACS
     batch_sizes: tuple[int, ...] = cm.BATCH_SIZES
@@ -162,6 +167,14 @@ class ServeConfig:
             self.obs.validate()
         except ValueError as exc:
             raise ConfigError(str(exc)) from exc
+        if self.stream is not None:
+            if not isinstance(self.stream, SourceConfig):
+                raise ConfigError("stream must be a SourceConfig, got "
+                                  f"{type(self.stream).__name__}")
+            try:
+                self.stream.validate()
+            except ValueError as exc:
+                raise ConfigError(str(exc)) from exc
         if not self.vfracs or any(v < 1 for v in self.vfracs):
             raise ConfigError(f"invalid vfracs {self.vfracs!r}")
         if not self.batch_sizes or any(b < 1 for b in self.batch_sizes):
@@ -203,6 +216,7 @@ class ServeConfig:
         replan_policy = d.pop("replan_policy", None)
         # optional for backward compat with pre-obs configs (defaults = off)
         obs = d.pop("obs", None)
+        stream = d.pop("stream", None)
         try:
             cfg = cls(
                 cluster=ClusterSpec(**d.pop("cluster")),
@@ -214,13 +228,18 @@ class ServeConfig:
                 replan_policy=(PolicyConfig(**replan_policy)
                                if replan_policy is not None else None),
                 obs=(ObsConfig(**obs) if obs is not None else ObsConfig()),
+                stream=(SourceConfig.from_dict(stream)
+                        if stream is not None else None),
                 vfracs=tuple(d.pop("vfracs")),
                 batch_sizes=tuple(d.pop("batch_sizes")),
                 token_fn=token_fn,
                 **d,
             )
-        except (TypeError, KeyError) as exc:
-            # unknown keys (TypeError) and missing required sections
-            # (KeyError from the pops above) both surface as ConfigError
+        except ConfigError:
+            raise
+        except (TypeError, KeyError, ValueError) as exc:
+            # unknown keys (TypeError), missing required sections (KeyError
+            # from the pops above) and invalid nested values (ValueError,
+            # e.g. a bad stream/admission section) all surface as ConfigError
             raise ConfigError(f"malformed ServeConfig dict: {exc!r}") from exc
         return cfg.validate()

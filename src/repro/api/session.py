@@ -566,6 +566,71 @@ class Session:
             self.submit(req)
         return self.drain()
 
+    def build_source(self, scfg=None):
+        """Materialize a `SourceConfig` (default: ``config.stream``) against
+        this session's profiled models: unset per-source SLOs resolve to the
+        profiled `slo_s`, an unset model to the first configured model."""
+        self._forbid_closed("build_source")
+        from repro.stream import build_source
+
+        scfg = scfg if scfg is not None else self.config.stream
+        if scfg is None:
+            raise LifecycleError(
+                "build_source() needs a SourceConfig (argument or "
+                "ServeConfig.stream)")
+        store = self.profile()
+        slos = {name: prof.slo_s for name, prof in store.profiles.items()}
+        return build_source(scfg, slos,
+                            default_model=next(iter(self._cfgs), None))
+
+    def serve(self, source=None, horizon_s: float | None = None) -> Report:
+        """Open-loop serving: pull arrivals from `source` (a `repro.stream`
+        Source; default: one built from ``config.stream``) incrementally
+        through the data plane until `horizon_s` virtual seconds of arrivals
+        have been admitted (arrivals at/after the horizon are never
+        admitted; admitted work drains to completion), then report.
+
+        `horizon_s=None` is allowed only for a `TraceSource` (finite by
+        construction) — an unbounded generator would serve forever.  The
+        parity anchor: ``serve(TraceSource(trace))`` is bit-for-bit
+        identical to ``run(trace)`` on an identically configured session.
+
+        Like `run`/`drain`, serving shares the session's single monotonic
+        virtual clock: a second serve whose arrivals restart behind the
+        horizon already served is rejected loudly."""
+        self._require_deployed("serve")
+        if self._pending:
+            raise LifecycleError(
+                "serve() with submit()ed requests pending; drain() them "
+                "first — one virtual clock cannot interleave a stream with "
+                "a batch replay")
+        if source is None:
+            source = self.build_source()
+        from repro.stream import TraceSource
+
+        if horizon_s is None and not isinstance(source, TraceSource):
+            raise LifecycleError(
+                "serve() needs horizon_s for a potentially unbounded "
+                f"source ({type(source).__name__}); only TraceSource is "
+                "finite by construction")
+        arrivals = source.arrivals()
+        served_until = self._dp.tel.horizon_s
+        if served_until > 0.0:
+            first = next(arrivals, None)
+            if first is not None:
+                if first.arrival_s < served_until - 1e-9:
+                    raise LifecycleError(
+                        f"source arrivals start at t={first.arrival_s:.6f}s, "
+                        f"behind the horizon this session already served "
+                        f"({served_until:.6f}s); offset the source or serve "
+                        "on a fresh Session")
+                import itertools
+
+                arrivals = itertools.chain((first,), arrivals)
+        self._dp.serve_stream(arrivals, horizon_s=horizon_s)
+        self._resolve_outcomes()
+        return self.report()
+
     def _resolve_outcomes(self) -> None:
         outcomes = self._dp.tel.outcomes
         for i in range(self._resolved_upto, len(outcomes)):

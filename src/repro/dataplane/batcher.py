@@ -48,17 +48,26 @@ class AdaptiveBatcher:
                  scheduler_cls=ReservationScheduler) -> None:
         self.runtime = runtime
         min_service = {}
+        capacity: dict[str, int] = {}
         for p in runtime.pipelines:
             lat = unloaded_latency_s(p)
             cur = min_service.get(p.model_name)
             min_service[p.model_name] = lat if cur is None else min(cur, lat)
-        self.queues = QueueSet(min_service, policy)
+            # optimistic per-quantum clearing capacity: each pipeline serves
+            # `unified_batch` requests per pool slot, with min-stage pool
+            # width slots in parallel — the watermark shed bound's divisor
+            width = max(1, min(len(s.vdevs) for s in p.stages))
+            capacity[p.model_name] = (
+                capacity.get(p.model_name, 0) + p.unified_batch * width)
+        self.queues = QueueSet(min_service, policy, capacity_hint=capacity)
         # the simulator's scheduler, pointed at our queues
         self.sched = scheduler_cls(runtime, queues=self.queues.by_model)
 
     # ------------------------------------------------------------------ api
-    def offer(self, req: Request, now: float) -> tuple[bool, list[Request]]:
-        """Admission front door; returns (admitted, overflow-shed requests)."""
+    def offer(self, req: Request, now: float
+              ) -> tuple[str | None, list[Request]]:
+        """Admission front door; returns (drop cause or None if admitted,
+        overflow-shed requests)."""
         return self.queues.offer(req, now)
 
     def plan(self, model: str, now: float

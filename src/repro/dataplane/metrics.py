@@ -43,6 +43,7 @@ class Telemetry:
     queue_delay_s: list[float] = field(default_factory=list)
     dispatches: list[DispatchRecord] = field(default_factory=list)
     admission_rejects: int = 0
+    backpressure_rejects: int = 0
     overflow_sheds: int = 0
     expiry_drops: int = 0
     sched_drops: int = 0
@@ -54,6 +55,14 @@ class Telemetry:
     # .SchedulerStats); filled by DataPlane.serve
     scheduler: dict = field(default_factory=dict)
     horizon_s: float = 0.0
+    # horizon the caller *requested* for an open-ended serve (serve_stream's
+    # horizon_s argument); None for finite-trace replays, where the horizon
+    # is simply the last event time.  When set, horizon_s = max(last event,
+    # requested) so goodput denominates over the full requested window.
+    requested_horizon_s: float | None = None
+    # (t_s, model, "shed"|"resume", queue_depth) per watermark transition —
+    # the backpressure episode log mirrored into obs as admit.shed/resume
+    backpressure_events: list = field(default_factory=list)
     # live re-planning (repro.controlplane): completed plan hot-swaps, and one
     # (virtual time, reason) entry per swap for continuity assertions
     plan_swaps: int = 0
@@ -106,6 +115,9 @@ class Telemetry:
     def queue_delay_pct(self, q: float) -> float:
         if not self.queue_delay_s:
             return 0.0
+        if len(self.queue_delay_s) == 1:
+            # a 1-sample percentile is that sample; skip interpolation noise
+            return float(self.queue_delay_s[0])
         return float(np.percentile(self.queue_delay_s, q))
 
     # -------------------------------------------------------------- finish
@@ -188,11 +200,14 @@ class Telemetry:
             "queue_delay_p99_ms": self.queue_delay_pct(99) * 1e3,
             "drops": {
                 "admission_reject": self.admission_rejects,
+                "backpressure_reject": self.backpressure_rejects,
                 "overflow_shed": self.overflow_sheds,
                 "expired": self.expiry_drops,
                 "scheduler": self.sched_drops,
                 "exec_failure": self.exec_failures,
             },
+            "requested_horizon_s": self.requested_horizon_s,
+            "backpressure_events": [list(e) for e in self.backpressure_events],
             "inflight_hwm": self.inflight_hwm,
             "plan_swaps": self.plan_swaps,
             "epochs_gcd": self.epochs_gcd,

@@ -165,6 +165,10 @@ class DataPlane:
         # called as hook(request, now) after each arrival is admitted/rejected;
         # the ReplanLoop (repro.controlplane) registers itself here
         self.arrival_hooks: list = []
+        # per-model backpressure edge state (True while between an admit.shed
+        # and its admit.resume); plane-level so it survives swap_plan's queue
+        # rebuild and the post-swap poll can emit the resume edge
+        self._bp_shedding: dict[str, bool] = {}
         self._install_runtime(runtime, dispatcher)
 
     def _install_runtime(self, runtime: ClusterRuntime,
@@ -202,15 +206,54 @@ class DataPlane:
 
     # ------------------------------------------------------------------ events
     def push(self, t: float, kind: int, payload: object) -> None:
-        heapq.heappush(self.events, (t, next(self.seq), kind, payload))
+        # rank 0 for arrivals, 1 for derived events: at equal t an arrival
+        # always processes before the work it could join — exactly the order
+        # batch `serve` produced when every arrival was pushed up front (all
+        # arrival seqs below all derived seqs), now independent of WHEN the
+        # arrival entered the heap.  That independence is what makes
+        # serve(trace) bit-identical to serve_stream(TraceSource(trace)).
+        rank = 0 if kind == self.ARRIVAL else 1
+        heapq.heappush(self.events, (t, rank, next(self.seq), kind, payload))
 
     def serve(self, trace: list[Request]) -> Telemetry:
-        trace = sorted(trace)
-        for req in trace:
-            self.push(req.arrival_s, self.ARRIVAL, req)
-        horizon = trace[-1].arrival_s if trace else 0.0
-        while self.events:
-            t, _, kind, payload = heapq.heappop(self.events)
+        """Replay a finite trace (= stream its sorted arrivals)."""
+        return self.serve_stream(iter(sorted(trace)))
+
+    def serve_stream(self, arrivals, horizon_s: float | None = None) -> Telemetry:
+        """Pull-based serve: consume `arrivals` (an iterator of Requests in
+        non-decreasing arrival_s order, possibly unbounded) incrementally —
+        the next arrival enters the event heap only once the heap holds no
+        earlier event, so unbounded sources never materialize.
+
+        `horizon_s` truncates the source: arrivals at or after it are never
+        admitted (the half-open [0, horizon) convention of the trace
+        generators); already-admitted work still drains to completion.
+        Required when `arrivals` is unbounded."""
+        arrivals = iter(arrivals)
+        pending: Request | None = next(arrivals, None)
+        last_arrival = -float("inf")
+        horizon = 0.0
+        while True:
+            # admit every source arrival due before the next heap event;
+            # one-request lookahead keeps memory O(in-flight), not O(trace)
+            while pending is not None and (
+                horizon_s is None or pending.arrival_s < horizon_s
+            ) and (
+                not self.events or pending.arrival_s <= self.events[0][0]
+            ):
+                if pending.arrival_s < last_arrival:
+                    raise ValueError(
+                        "source arrivals must be non-decreasing: got "
+                        f"{pending.arrival_s} after {last_arrival}")
+                last_arrival = pending.arrival_s
+                self.push(pending.arrival_s, self.ARRIVAL, pending)
+                pending = next(arrivals, None)
+            if pending is not None and (
+                    horizon_s is not None and pending.arrival_s >= horizon_s):
+                pending = None  # source truncated at the horizon
+            if not self.events:
+                break
+            t, _, _, kind, payload = heapq.heappop(self.events)
             if kind == self.ARRIVAL:
                 self._on_arrival(t, payload)
             elif kind == self.WAKE:
@@ -222,6 +265,18 @@ class DataPlane:
                 self._on_xfer_done(t, payload)
             self.rt.maybe_gc(t, self.gc_interval_s)
             horizon = max(horizon, t)
+        return self._finalize_serve(horizon, requested=horizon_s)
+
+    def _finalize_serve(self, horizon: float,
+                        requested: float | None = None) -> Telemetry:
+        """Shared serve epilogue: horizon accounting, scheduler stats,
+        wall-measurement harvest, telemetry/observer finalize."""
+        self.tel.requested_horizon_s = requested
+        if requested is not None:
+            # open-ended serve truncated at a requested horizon: goodput
+            # denominates over the full requested window even if the last
+            # event landed earlier (idle tail is real serving time)
+            horizon = max(horizon, requested)
         self.tel.horizon_s = max(horizon, 1e-9)
         st = self.batcher.stats
         probes = self._retired_probe_calls + st.probe_calls
@@ -246,9 +301,9 @@ class DataPlane:
     def _admit(self, req: Request, now: float) -> None:
         """Admission bookkeeping shared by live arrivals and swap carry-over:
         offer to the queues, record reject/shed outcomes."""
-        admitted, shed = self.batcher.offer(req, now)
-        if not admitted:
-            self._drop(req, now, "admission_reject")
+        cause, shed = self.batcher.offer(req, now)
+        if cause is not None:
+            self._drop(req, now, cause)
         for r in shed:
             self._drop(r, now, "overflow_shed")
 
@@ -276,6 +331,36 @@ class DataPlane:
                     self.push(action.time_s, self.WAKE, model)
             elif isinstance(action, Dispatch):
                 self._dispatch(now, action)
+        self._poll_backpressure(model, now)
+
+    # ----------------------------------------------------------- backpressure
+    def _poll_backpressure(self, model: str, now: float) -> None:
+        """Edge-detect watermark state per model and journal the transitions
+        (`admit.shed` on entering backpressure, `admit.resume` on leaving).
+
+        Runs after every scheduling round — both arrival- and wake-driven —
+        so the resume edge fires as soon as dispatches drain the queue below
+        the low watermark, not only on the next arrival.  The flag dict is
+        plane-level (it survives swap_plan's queue rebuild), so a swap that
+        clears the congestion emits the resume edge naturally."""
+        q = self.batcher.queues.by_model.get(model)
+        if q is None or q.policy.high_watermark is None:
+            return
+        was = self._bp_shedding.get(model, False)
+        if not was and q.bp_active:
+            self._bp_shedding[model] = True
+            self.tel.backpressure_events.append(
+                (now, model, "shed", len(q)))
+            if self.obs is not None:
+                self.obs.on_admit_shed(now, model, len(q),
+                                       q.shed, q.backpressure_rejected)
+        elif was:
+            if q.maybe_resume() or not q.bp_active:
+                self._bp_shedding[model] = False
+                self.tel.backpressure_events.append(
+                    (now, model, "resume", len(q)))
+                if self.obs is not None:
+                    self.obs.on_admit_resume(now, model, len(q))
 
     # -------------------------------------------------------------- hot swap
     def swap_plan(
@@ -666,6 +751,7 @@ class DataPlane:
     # its call site, so it is deliberately absent here
     _DROP_COUNTERS = {
         "admission_reject": "admission_rejects",
+        "backpressure_reject": "backpressure_rejects",
         "overflow_shed": "overflow_sheds",
         "expired": "expiry_drops",
         "scheduler": "sched_drops",

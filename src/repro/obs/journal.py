@@ -9,8 +9,8 @@ here as flat dicts with a shared envelope: ``{"t_s": <virtual seconds>,
 kind                payload (beyond t_s)
 ==================  =========================================================
 req.arrive          req_id, model, deadline_s
-req.drop            req_id, cause (admission_reject | overflow_shed |
-                    expired | scheduler | exec_failure)
+req.drop            req_id, cause (admission_reject | backpressure_reject |
+                    overflow_shed | expired | scheduler | exec_failure)
 req.complete        req_id, batch_id, ok
 batch.dispatch      batch_id, epoch, pipeline_id, batch_size, req_ids,
                     queue_depth, planned_finish_s
@@ -26,6 +26,11 @@ replan.decision     the ReplanPolicy decision dict (accepted, reason,
                     benefit/cost inputs)
 replan.failure      error
 replan.success      solver_wall_s, throughput_rps
+admit.shed          model, queue_depth, shed_total,
+                    backpressure_rejected_total — a model queue crossed its
+                    high watermark and entered backpressure
+admit.resume        model, queue_depth — the queue drained to the resume
+                    watermark; backpressure released
 ==================  =========================================================
 
 Values are strict-JSON by construction: tuples become lists at record time

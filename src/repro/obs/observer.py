@@ -133,6 +133,21 @@ class Observer:
                    "solver_wall_s": solver_wall_s,
                    "throughput_rps": throughput_rps})
 
+    def on_admit_shed(self, t: float, model: str, depth: int,
+                      shed_total: int, rejected_total: int) -> None:
+        """A model's queue entered backpressure (depth crossed the high
+        watermark): doomed queued work is being shed / arrivals door-rejected
+        until depth drains to the resume watermark."""
+        self.push({"t_s": t, "kind": "admit.shed", "model": model,
+                   "queue_depth": depth, "shed_total": shed_total,
+                   "backpressure_rejected_total": rejected_total})
+
+    def on_admit_resume(self, t: float, model: str, depth: int) -> None:
+        """The model's queue drained to the resume watermark: backpressure
+        released, admission back to normal."""
+        self.push({"t_s": t, "kind": "admit.resume", "model": model,
+                   "queue_depth": depth})
+
     # ------------------------------------------------------ materialization
     def _flush(self) -> None:
         """Replay the deferred buffer into windows + journal (in order)."""

@@ -202,7 +202,8 @@ def perfetto_trace(events: list[dict]) -> dict:
                        "ts": ev["t_s"] * _US,
                        "args": {k: v for k, v in ev.items()
                                 if k not in ("kind",)}})
-        elif kind in ("replan.failure", "replan.success"):
+        elif kind in ("replan.failure", "replan.success",
+                      "admit.shed", "admit.resume"):
             te.append({"ph": "i", "pid": 4, "tid": 1, "s": "t",
                        "name": kind, "cat": "control",
                        "ts": ev["t_s"] * _US,

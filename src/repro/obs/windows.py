@@ -181,4 +181,30 @@ class WindowedMetrics:
                     for w in wins]
                 for c in classes if cluster_counts.get(c)
             }
+        # cumulative-so-far view for open-ended serves: at each window edge,
+        # the running totals and the attainment/goodput a dashboard would
+        # show "as of now" (goodput denominates over elapsed virtual time,
+        # i.e. the right edge of the window)
+        arr_c: list[int] = []
+        comp_c: list[int] = []
+        ok_c: list[int] = []
+        att_c: list[float | None] = []
+        good_c: list[float] = []
+        a = comp = ok = 0
+        for i, w in enumerate(wins):
+            a += w.arrivals
+            comp += w.completions
+            ok += w.ok
+            arr_c.append(a)
+            comp_c.append(comp)
+            ok_c.append(ok)
+            att_c.append(ok / comp if comp else None)
+            good_c.append(ok / ((i + 1) * ws))
+        out["cumulative"] = {
+            "arrivals": arr_c,
+            "completions": comp_c,
+            "ok": ok_c,
+            "attainment": att_c,
+            "goodput_rps": good_c,
+        }
         return out

@@ -1,0 +1,98 @@
+"""CI guard: the hypothesis property suites must RUN, not silently skip.
+
+The property tests import `given`/`st` through `tests/_hypothesis_compat.py`,
+which degrades to a seeded sampling engine when hypothesis is missing — so
+they execute everywhere.  But a conftest regression, a rotted import, or a
+stray `pytest.mark.skipif` could still turn them back into silent skips, and
+a green CI would hide it.  This script reads the junit XML of the property
+run and fails loudly unless:
+
+* every property module collected > 0 tests,
+* zero tests in those modules skipped,
+* the named keystone properties are present AND passed.
+
+Usage (see .github/workflows/ci.yml):
+
+    python -m pytest tests/test_property_scheduler.py tests/test_sources.py \
+        tests/test_stream.py tests/test_epoch_lifecycle.py tests/test_milp.py \
+        --junitxml=property-report.xml
+    python tests/check_property_run.py property-report.xml
+
+Not named test_*.py, so pytest never collects it as a suite.
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+# every module the property run must cover, with one keystone test each —
+# a spelling drift here fails CI, which is the point (collected-count floors
+# alone cannot tell "the property ran" from "a rename dropped it")
+REQUIRED = {
+    "test_property_scheduler": "test_simulation_invariants",
+    "test_sources": "test_arrivals_non_decreasing",
+    "test_stream": "test_watermark_invariants_hold_under_arbitrary_offers",
+    "test_epoch_lifecycle": "test_property_no_chip_or_nic_double_booking",
+    "test_milp": "test_weight_scale_invariance",
+}
+
+
+def main(path: str) -> int:
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        print("FAIL: hypothesis is not importable in CI — the property "
+              "suites would run on the fallback sampler; install "
+              "requirements-dev.txt")
+        return 1
+
+    cases = ET.parse(path).getroot().iter("testcase")
+    by_module: dict[str, list] = {}
+    for tc in cases:
+        # classname is dotted ("tests.test_milp", possibly ".TestClass"):
+        # the module is the component with the test_ prefix
+        parts = tc.get("classname", "").split(".")
+        mod = next((p for p in parts if p.startswith("test_")),
+                   parts[-1] if parts else "")
+        by_module.setdefault(mod, []).append(tc)
+
+    failures: list[str] = []
+    for mod, keystone in REQUIRED.items():
+        tcs = by_module.get(mod, [])
+        if not tcs:
+            failures.append(f"{mod}: collected 0 tests (silent skip "
+                            "regression, or the module was not run)")
+            continue
+        skipped = [tc.get("name") for tc in tcs
+                   if tc.find("skipped") is not None]
+        if skipped:
+            failures.append(f"{mod}: {len(skipped)} skipped: {skipped}")
+        names = {tc.get("name", "").split("[")[0] for tc in tcs}
+        if keystone not in names:
+            failures.append(f"{mod}: keystone property {keystone!r} missing")
+        else:
+            bad = [tc for tc in tcs
+                   if tc.get("name", "").split("[")[0] == keystone
+                   and (tc.find("failure") is not None
+                        or tc.find("error") is not None)]
+            if bad:
+                failures.append(f"{mod}: keystone property {keystone!r} "
+                                "failed")
+        print(f"ok: {mod}: {len(tcs)} ran, 0 skipped")
+
+    if failures:
+        print("FAIL: property-run regression:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    total = sum(len(v) for m, v in by_module.items() if m in REQUIRED)
+    print(f"ok: property suites ran un-skipped ({total} tests)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1]))

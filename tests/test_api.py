@@ -375,6 +375,7 @@ EXPECTED_ALL = [
     "RequestHandle",
     "ServeConfig",
     "Session",
+    "SourceConfig",
     "SwapRecord",
     "build_profile_store",
     "profile_model",
@@ -389,6 +390,7 @@ EXPECTED_SIGNATURES = {
     "Session.deploy": "(self, mode: 'str' = 'sim') -> 'Session'",
     "Session.submit": "(self, req: 'Request') -> 'RequestHandle'",
     "Session.run": "(self, trace) -> 'Report'",
+    "Session.serve": "(self, source=None, horizon_s: 'float | None' = None) -> 'Report'",
     "Session.drain": "(self) -> 'Report'",
     "Session.report": "(self) -> 'Report'",
     "Session.swap": "(self, plan: 'ClusterPlan | None' = None, *, now: 'float | None' = None, reason: 'str | None' = None, objective: 'Objective | None' = None, slo_margin: 'float | None' = None) -> 'SwapRecord'",
@@ -422,5 +424,5 @@ def test_config_field_surface_snapshot():
     assert [f.name for f in dataclasses.fields(ServeConfig)] == [
         "cluster", "models", "backend", "objective", "source", "feedback",
         "admission", "replan", "replan_policy", "gc_interval_s", "obs",
-        "vfracs", "batch_sizes", "serve_seq_len", "max_inflight",
+        "stream", "vfracs", "batch_sizes", "serve_seq_len", "max_inflight",
         "quantize_boundary", "calibrate", "seed", "token_fn"]

@@ -4,7 +4,7 @@ re-planning with live DataPlane.swap_plan."""
 
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.controlplane import (
     Objective,

@@ -3,7 +3,7 @@ float-identical telemetry) and cross-epoch physical resource coupling (no
 chip/NIC double-booking even when an old stage slips past its reservation)."""
 
 import numpy as np
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.controlplane import Objective, Planner, ProfileStore
 from repro.core import blocks, costmodel as cm

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.kernels.boundary_quant import kernel as bq_k, ref as bq_r
 from repro.kernels.decode_attention import kernel as da_k, ref as da_r

@@ -1,5 +1,7 @@
 """Control-plane tests: literal Appendix-A.2 MILP vs the scalable planner."""
 
+import functools
+
 import numpy as np
 import pytest
 
@@ -7,6 +9,8 @@ from repro.core import blocks, costmodel as cm
 from repro.controlplane import enumerate_templates
 from repro.core import plan_cluster, plan_dart_r, plan_np, solve_milp
 from repro.core.types import ClusterSpec, LayerCost
+
+from _hypothesis_compat import given, settings, st
 
 
 def _profile(n_layers=8, n_blocks=4, slo=0.03, seed=0, seq=256, name="m"):
@@ -181,6 +185,38 @@ def test_multi_model_milp_fractional_dominates_whole_chips():
                              slo_margin=0.4, max_partitions=2,
                              time_limit_s=60.0, whole_chips=True)
     assert _min_norm(frac, weights) >= _min_norm(whole, weights) - 1e-9
+
+
+@functools.lru_cache(maxsize=1)
+def _property_testbed():
+    """Small two-model testbed cached across property examples: the solves
+    are the expensive part, the drawn weights only re-run the master ILP."""
+    profs = {
+        "det": _profile(n_layers=4, seed=3, n_blocks=2, name="det"),
+        "cls": _profile(n_layers=4, seed=4, n_blocks=2, name="cls"),
+    }
+    tbls = {k: _table(v) for k, v in profs.items()}
+    return profs, tbls
+
+
+@settings(max_examples=5, deadline=None)
+@given(w0=st.floats(min_value=0.5, max_value=4.0),
+       w1=st.floats(min_value=0.5, max_value=4.0),
+       scale=st.floats(min_value=0.25, max_value=8.0))
+def test_weight_scale_invariance(w0, w1, scale):
+    """The min-normalized objective is invariant under uniform weight
+    scaling: `weights` and `c * weights` admit the same feasible set and the
+    objective scales by exactly 1/c, so the achieved optimum must too.
+    Alternate optima may differ as *plans*, but not in objective value."""
+    profs, tbls = _property_testbed()
+    w = {"det": w0, "cls": w1}
+    ws = {m: scale * v for m, v in w.items()}
+    base = plan_cluster(profs, tbls, CLUSTER, weights=w, slo_margin=0.4,
+                        max_partitions=2)
+    scaled = plan_cluster(profs, tbls, CLUSTER, weights=ws, slo_margin=0.4,
+                          max_partitions=2)
+    assert _min_norm(scaled.plan, ws) == pytest.approx(
+        _min_norm(base.plan, w) / scale, rel=1e-6)
 
 
 def test_single_model_wrapper_unchanged_by_multi_path():

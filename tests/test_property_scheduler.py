@@ -1,7 +1,7 @@
 """Hypothesis property tests on data-plane invariants (Algorithm 1/2)."""
 
 import numpy as np
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.core import blocks, costmodel as cm
 from repro.core import plan_cluster

@@ -1,7 +1,7 @@
 """Timeline + probe()/reserve() (paper Algorithm 2)."""
 
 import pytest
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.core.reservation import (
     NodeRes,

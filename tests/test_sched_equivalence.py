@@ -18,7 +18,7 @@ import math
 
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st  # degrades to skips without hypothesis
+from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
 from repro.core._reference import (
     ReferenceReservationScheduler,

@@ -1,0 +1,350 @@
+"""Streaming front-end: run/serve parity, backpressure invariants, journal.
+
+The PR's correctness spine, pinned at three layers:
+
+* **parity** — `Session.run(trace)` and `Session.serve(TraceSource(trace))`
+  are bit-for-bit identical (outcomes AND full telemetry snapshots), and
+  `serve(source, horizon)` matches `run(source.until(horizon))` outcome for
+  outcome — streaming admission is a pure refactoring of batch replay;
+* **watermarks** — depth never exceeds `high_watermark` once admission
+  settles, and a shed request is never one the position-aware feasibility
+  bound says could still meet its SLO (unit-level on `ModelQueue`,
+  property-tested, then end-to-end under a 4x overload);
+* **accounting** — `admit.shed`/`admit.resume` journal edges alternate per
+  model, windowed ok-sums reconcile exactly with Telemetry attainment under
+  shedding, and open-horizon serves denominate goodput over the requested
+  window.
+"""
+
+import json
+
+import pytest
+
+from repro.api import (
+    AdmissionPolicy,
+    ClusterSpec,
+    LifecycleError,
+    ModelSpec,
+    ObsConfig,
+    ServeConfig,
+    Session,
+    SourceConfig,
+)
+from repro.core.types import Request
+from repro.data.requests import poisson_trace
+from repro.dataplane.queues import ModelQueue
+from repro.stream import PoissonSource, TraceSource
+
+from _hypothesis_compat import given, settings, st
+
+CLUSTER = ClusterSpec(counts={"tpu-hi": 2, "tpu-lo": 4})
+MODEL = "stablelm-3b"
+
+
+def _config(**over):
+    base = dict(
+        cluster=CLUSTER,
+        models=(ModelSpec(arch=MODEL, seq_len=256, n_blocks=5),),
+    )
+    base.update(over)
+    return ServeConfig(**base)
+
+
+def _deployed(**over):
+    session = Session.from_config(_config(**over))
+    plan = session.plan()
+    session.deploy(mode="sim")
+    return session, plan
+
+
+def _req(i, arrival, deadline):
+    return Request(arrival_s=arrival, req_id=i, model_name="m",
+                   deadline_s=deadline)
+
+
+# ---------------------------------------------------------------------------
+# Parity: streaming admission is a pure refactoring of batch replay
+# ---------------------------------------------------------------------------
+
+
+def test_run_and_serve_trace_source_bit_identical():
+    """The acceptance criterion: on identically configured sessions,
+    `run(trace)` and `serve(TraceSource(trace))` agree on every outcome
+    float AND on the full telemetry snapshot — not approximately, exactly."""
+    sa, plan = _deployed()
+    sb, _ = _deployed()
+    slo = sa.store.profiles[MODEL].slo_s
+    # 1.2x the planned throughput: drops occur, so drop parity is exercised
+    trace = poisson_trace(plan.throughput * 1.2, 1.0, slo, MODEL, seed=3)
+    ra = sa.run(trace)
+    rb = sb.serve(TraceSource(trace))
+    assert ra.telemetry.outcomes == rb.telemetry.outcomes  # exact, per float
+    assert ra.telemetry.snapshot() == rb.telemetry.snapshot()
+
+
+def test_serve_stream_matches_run_of_materialized_prefix():
+    """Pulling an unbounded source up to `horizon_s` must serve exactly the
+    requests `until(horizon_s)` materializes, with identical outcomes —
+    the one-request-lookahead admission loop cannot perturb scheduling."""
+    sa, plan = _deployed()
+    sb, _ = _deployed()
+    slo = sa.store.profiles[MODEL].slo_s
+    src = PoissonSource(plan.throughput * 0.8, slo_s=slo, model_name=MODEL,
+                        seed=11)
+    horizon = 1.0
+    ra = sa.run(src.until(horizon))
+    rb = sb.serve(src, horizon_s=horizon)
+    assert ra.telemetry.outcomes == rb.telemetry.outcomes
+    # only the horizon accounting may differ: serve() pins the requested
+    # window even when the last event lands earlier
+    assert rb.telemetry.requested_horizon_s == horizon
+    assert rb.telemetry.horizon_s >= horizon
+    assert ra.telemetry.requested_horizon_s is None
+
+
+def test_serve_builds_source_from_config_stream():
+    cfg_stream = SourceConfig(kind="poisson", rate_rps=20.0, seed=5)
+    session, _ = _deployed(stream=cfg_stream)
+    expected = session.build_source().until(0.5)
+    rep = session.serve(horizon_s=0.5)
+    assert len(rep.telemetry.outcomes) == len(expected)
+    # the default model resolved to the session's one configured model
+    assert {r.model_name for r in expected} == {MODEL}
+
+
+def test_serve_guards():
+    session, plan = _deployed()
+    slo = session.store.profiles[MODEL].slo_s
+    src = PoissonSource(10.0, slo_s=slo, model_name=MODEL, seed=0)
+    # unbounded source without a horizon would serve forever
+    with pytest.raises(LifecycleError, match="horizon_s"):
+        session.serve(src)
+    # no config.stream and no argument: nothing to build
+    with pytest.raises(LifecycleError, match="SourceConfig"):
+        session.serve(horizon_s=1.0)
+    # a pending submit() batch cannot interleave with a stream
+    session.submit(Request(arrival_s=0.0, req_id=1, model_name=MODEL,
+                           deadline_s=slo))
+    with pytest.raises(LifecycleError, match="pending"):
+        session.serve(src, horizon_s=1.0)
+    session.drain()
+    # a second serve restarting behind the served horizon is refused
+    with pytest.raises(LifecycleError, match="behind the horizon"):
+        session.serve(TraceSource([
+            Request(arrival_s=0.0, req_id=2, model_name=MODEL,
+                    deadline_s=slo)]))
+
+
+def test_serve_stream_rejects_decreasing_arrivals():
+    session, _ = _deployed()
+    slo = session.store.profiles[MODEL].slo_s
+    out_of_order = [
+        Request(arrival_s=0.2, req_id=0, model_name=MODEL, deadline_s=0.2 + slo),
+        Request(arrival_s=0.1, req_id=1, model_name=MODEL, deadline_s=0.1 + slo),
+    ]
+    with pytest.raises(ValueError, match="non-decreasing"):
+        session.dataplane.serve_stream(iter(out_of_order))
+
+
+# ---------------------------------------------------------------------------
+# Watermark mechanics (unit level: ModelQueue)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_policy_watermark_validation():
+    with pytest.raises(ValueError, match="high_watermark"):
+        AdmissionPolicy(high_watermark=0)
+    with pytest.raises(ValueError, match="low_watermark requires"):
+        AdmissionPolicy(low_watermark=2)
+    with pytest.raises(ValueError, match="low_watermark"):
+        AdmissionPolicy(high_watermark=4, low_watermark=5)
+    assert AdmissionPolicy(high_watermark=9).resume_depth == 4
+    assert AdmissionPolicy(high_watermark=9, low_watermark=7).resume_depth == 7
+    assert AdmissionPolicy().resume_depth is None
+
+
+def test_watermark_door_reject_caps_depth():
+    """With nothing provably doomed, the high watermark rejects the arrival
+    at the door rather than shedding feasible queued work."""
+    pol = AdmissionPolicy(high_watermark=4, feasibility_check=False,
+                          prune_expired=False)
+    q = ModelQueue("m", pol, min_service_s=0.01, capacity_hint=1)
+    for i in range(4):
+        cause, shed = q.offer(_req(i, 0.0, 1e9), now=0.0)
+        assert cause is None and not shed
+    assert not q.bp_active
+    cause, shed = q.offer(_req(99, 0.0, 1e9), now=0.0)
+    assert cause == "backpressure_reject" and not shed
+    assert len(q) == 4 and q.bp_active and q.backpressure_rejected == 1
+    # hysteresis: resume only at the low watermark (default high//2)
+    q.popleft()
+    assert not q.maybe_resume() and q.bp_active  # depth 3 > 2
+    q.popleft()
+    assert q.maybe_resume() and not q.bp_active  # depth 2 == resume depth
+    assert not q.maybe_resume()  # edge-triggered, not level-triggered
+
+
+def test_watermark_sheds_only_provably_doomed():
+    pol = AdmissionPolicy(high_watermark=3, feasibility_check=False)
+    q = ModelQueue("m", pol, min_service_s=1.0, capacity_hint=1)
+    for i, d in enumerate([10.0, 0.5, 20.0]):  # d=0.5 cannot finish (lb 1.0)
+        q.offer(_req(i, 0.0, d), now=0.0)
+    cause, shed = q.offer(_req(3, 0.0, 30.0), now=0.0)
+    assert cause is None  # the arrival itself was admitted
+    assert [r.req_id for r in shed] == [1]
+    assert len(q) == 3 and q.shed == 1
+    # the audit row proves doom: optimistic bound strictly past the deadline
+    (rid, pos, bound, deadline), = q.last_shed_audit
+    assert rid == 1 and pos == 0 and bound == 1.0 and deadline == 0.5
+    assert bound > deadline
+
+
+@settings(max_examples=40, deadline=None)
+@given(high=st.integers(min_value=1, max_value=6),
+       cap=st.integers(min_value=1, max_value=4),
+       reqs=st.lists(st.tuples(st.floats(min_value=0.0, max_value=0.2),
+                               st.floats(min_value=0.05, max_value=3.0)),
+                     min_size=1, max_size=40))
+def test_watermark_invariants_hold_under_arbitrary_offers(high, cap, reqs):
+    """For any offer sequence: (a) depth never exceeds the high watermark
+    after an offer settles, (b) every shed request was provably doomed
+    (audited optimistic bound strictly past its deadline), (c) the counter
+    algebra closes: depth == admitted - shed (nothing is popped here)."""
+    pol = AdmissionPolicy(high_watermark=high, feasibility_check=False,
+                          prune_expired=False)
+    q = ModelQueue("m", pol, min_service_s=0.1, capacity_hint=cap)
+    now = 0.0
+    for i, (gap, slack) in enumerate(reqs):
+        now += gap
+        cause, shed = q.offer(_req(i, now, now + slack), now=now)
+        assert len(q) <= high
+        assert cause in (None, "backpressure_reject")
+        for r in shed:
+            row = next(a for a in q.last_shed_audit if a[0] == r.req_id)
+            _, pos, bound, deadline = row
+            assert bound > deadline + pol.slack_eps_s
+            assert bound == pytest.approx(
+                now + q.min_service_s * (1 + pos // q.capacity_hint))
+        assert len(q) == q.admitted - q.shed
+
+
+# ---------------------------------------------------------------------------
+# End-to-end overload: shedding, journal edges, windowed reconciliation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def overload_run():
+    # a generous SLO keeps overload work feasible-but-waiting, so backlog
+    # builds real queue depth (a tight SLO would let the reservation
+    # scheduler drop infeasible work before the watermark ever trips)
+    session, plan = _deployed(
+        models=(ModelSpec(arch=MODEL, seq_len=256, n_blocks=5,
+                          slo_scale=20.0),),
+        admission=AdmissionPolicy(high_watermark=6, low_watermark=2),
+        obs=ObsConfig(level="aggregate", window_s=0.25),
+    )
+    slo = session.store.profiles[MODEL].slo_s
+    src = PoissonSource(plan.throughput * 4.0, slo_s=slo, model_name=MODEL,
+                        seed=7)
+    rep = session.serve(src, horizon_s=2.0)
+    return session, rep
+
+
+def test_overload_sheds_and_caps_depth(overload_run):
+    session, rep = overload_run
+    tel = rep.telemetry
+    # 4x overload with a depth-6 watermark must trip backpressure
+    assert tel.backpressure_rejects > 0
+    assert tel.backpressure_events
+    q = session.dataplane.batcher.queues.by_model[MODEL]
+    assert q.backpressure_rejected == tel.backpressure_rejects
+    assert len(q) == 0  # admitted work drained to completion
+    # every externally observable depth gauge respects the watermark
+    depth_max = [d for d in rep.timeseries()["queue_depth_max"]
+                 if d is not None]
+    assert depth_max and max(depth_max) <= 6
+    # the snapshot stays strict-JSON with the new accounting keys
+    snap = json.loads(json.dumps(tel.snapshot()))
+    assert snap["requested_horizon_s"] == 2.0
+    assert snap["drops"]["backpressure_reject"] == tel.backpressure_rejects
+    assert len(snap["backpressure_events"]) == len(tel.backpressure_events)
+
+
+def test_overload_journal_edges_alternate(overload_run):
+    session, rep = overload_run
+    tel = rep.telemetry
+    events = [e for e in rep.obs.journal.events
+              if e["kind"] in ("admit.shed", "admit.resume")]
+    assert len(events) == len(tel.backpressure_events)
+    kinds = [e["kind"] for e in events if e["model"] == MODEL]
+    # edges strictly alternate, starting with shed; the run drains, so the
+    # final edge is the resume that released backpressure
+    assert kinds[0] == "admit.shed" and kinds[-1] == "admit.resume"
+    assert all(a != b for a, b in zip(kinds, kinds[1:]))
+    for ev in events:
+        if ev["kind"] == "admit.shed":
+            # journaled after admission settles: the door-reject/shed has
+            # already restored depth to the watermark cap
+            assert 2 < ev["queue_depth"] <= 6
+        else:
+            assert ev["queue_depth"] <= 2  # hysteresis floor
+
+
+def test_overload_windows_reconcile_with_telemetry(overload_run):
+    """Under shedding, the windowed ok/completion/drop sums must equal the
+    aggregate Telemetry exactly — no request is double-counted or lost
+    between the two accounting paths."""
+    session, rep = overload_run
+    tel = rep.telemetry
+    totals = rep.obs.windows.totals()
+    assert totals["completions"] == tel.served
+    assert sum(totals["drops"].values()) == tel.dropped
+    assert totals["arrivals"] == len(tel.outcomes) == tel.served + tel.dropped
+    ok = sum(1 for o in tel.outcomes if o.ok)
+    assert totals["ok"] == ok
+    assert tel.attainment == ok / len(tel.outcomes)
+    series = rep.timeseries()
+    assert sum(series["ok"]) == ok
+    cum = series["cumulative"]
+    assert cum["arrivals"][-1] == totals["arrivals"]
+    assert cum["ok"][-1] == ok
+    assert cum["attainment"][-1] == pytest.approx(ok / tel.served)
+    # cumulative goodput at the last edge denominates over elapsed time
+    n = series["n_windows"]
+    assert cum["goodput_rps"][-1] == pytest.approx(
+        ok / (n * series["window_s"]))
+
+
+# ---------------------------------------------------------------------------
+# Open-horizon accounting + sparse-window guards
+# ---------------------------------------------------------------------------
+
+
+def test_open_horizon_goodput_denominates_requested_window():
+    """A sparse serve whose last event lands early still denominates
+    goodput over the *requested* horizon: idle tail is real serving time."""
+    session, _ = _deployed(obs=ObsConfig(level="aggregate", window_s=0.5))
+    slo = session.store.profiles[MODEL].slo_s
+    src = PoissonSource(2.0, slo_s=slo, model_name=MODEL, seed=13)
+    rep = session.serve(src, horizon_s=4.0)
+    tel = rep.telemetry
+    assert tel.requested_horizon_s == 4.0
+    assert tel.horizon_s >= 4.0
+    ok = sum(1 for o in tel.outcomes if o.ok)
+    assert tel.goodput_rps == ok / tel.horizon_s
+    # the window axis covers the whole requested horizon, not just events
+    series = rep.timeseries()
+    assert series["n_windows"] * series["window_s"] >= 4.0
+    assert len(series["cumulative"]["ok"]) == series["n_windows"]
+
+
+def test_queue_delay_percentile_sparse_guard():
+    """p99 on a single-sample window must return that sample, not
+    extrapolate past the list end."""
+    from repro.dataplane.metrics import Telemetry
+
+    tel = Telemetry()
+    tel.queue_delay_s.append(0.007)
+    assert tel.queue_delay_pct(99) == 0.007
+    assert tel.queue_delay_pct(50) == 0.007
