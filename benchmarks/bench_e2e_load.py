@@ -58,6 +58,7 @@ BENCH_JSON = Path("BENCH_e2e.json")
 OBS_TRACE_JSON = Path("BENCH_obs_trace.json")
 OBS_WINDOWS_JSON = Path("BENCH_obs_windows.json")
 BENCH_STREAM_JSON = Path("BENCH_stream.json")
+BENCH_ELASTIC_JSON = Path("BENCH_elastic.json")
 
 
 def _config(cluster, archs, **overrides) -> ServeConfig:
@@ -440,7 +441,13 @@ def _journal_integrity(journal, tel, trace_level=True) -> list[str]:
     per model starting with shed.  Returns violation strings (CI asserts
     the list is empty).  Per-request closure is only auditable at obs level
     "trace" (aggregate journals carry no req.* events — the --full soak's
-    regime); the admit-edge alternation check runs at every level."""
+    regime); the admit-edge alternation check runs at every level.
+
+    Elastic-cluster events are audited too: every `retry.exhausted` must
+    reference an arrived request, and every `resize.start` must pair with a
+    `resize.complete`.  A `resize.complete` resets the per-model admit-edge
+    state — the resized plan's queues start fresh, so shed -> shed across
+    the re-admission is legal, not an alternation break."""
     violations: list[str] = []
     arrived = {e["req_id"] for e in journal.select(kind="req.arrive")}
     if trace_level:
@@ -453,13 +460,22 @@ def _journal_integrity(journal, tel, trace_level=True) -> list[str]:
                 violations.append(
                     f"batch {ev['batch_id']} dispatches unknown req_ids "
                     f"{ghosts[:3]}")
-        for kind in ("req.complete", "req.drop"):
+        for kind in ("req.complete", "req.drop", "retry.exhausted"):
             for ev in journal.select(kind=kind):
                 if ev["req_id"] not in arrived:
                     violations.append(
                         f"{kind} for unknown req_id {ev['req_id']}")
+    starts = len(journal.select(kind="resize.start"))
+    completes = len(journal.select(kind="resize.complete"))
+    if starts != completes:
+        violations.append(f"resize.start events {starts} != "
+                          f"resize.complete {completes}")
     last_edge: dict[str, str] = {}
     for ev in journal.events:
+        if ev["kind"] == "resize.complete":
+            # the resized plan's queues carry fresh backpressure state
+            last_edge.clear()
+            continue
         if ev["kind"] not in ("admit.shed", "admit.resume"):
             continue
         prev = last_edge.get(ev["model"])
@@ -729,6 +745,228 @@ def run_swap_measured(quick=False):
     }
 
 
+def run_elastic(cluster_name="HC1-S", quick=False, seed=0):
+    """Chaos soak: attainment through elastic transitions plus node loss.
+
+    One trace, two serves.  The fault-free baseline replays the same seed on
+    the static cluster.  The elastic serve scripts three transitions:
+
+    1. scale-up   — ``Session.resize(+1 tpu-lo host)`` at ~0.2*H (planned
+       join: warm-started re-solve on the grown topology, live swap);
+    2. scale-down — ``Session.resize(-1 tpu-lo host)`` at ~0.45*H (graceful
+       drain: the departing pool's plan is swapped out through the epoch
+       lifecycle, so zero in-flight work is lost by construction);
+    3. preemption — ``DataPlane.fail_host`` on the BUSIEST tpu-lo host at
+       ~0.7*H (abrupt loss: probes pack low-numbered chips first, so the
+       tail host can sit idle at moderate load — a preemption only tests
+       recovery if it lands on in-flight work, so the script picks the
+       host holding the most remaining stage visits).  In-flight batches
+       on the lost chips cancel, victims re-admit iff the certified
+       completion bound still meets their deadline, and the loss-triggered
+       replan bypasses the ReplanPolicy gate/cooldown — DESIGN.md §13.
+
+    Gates (asserted here, so the CI chaos step fails loudly):
+      * the preemption genuinely cancelled in-flight batches
+        (inflight_failed > 0) and every victim resolved exactly once
+        (journal closure: arrive events == outcomes);
+      * the graceful phases lose nothing — exec_failures and
+        node_loss_drops both zero until the scripted preemption;
+      * the mandatory replan fired — a ``node_loss@...`` plan swap plus an
+        accepted ``mandatory:node_loss`` policy decision;
+      * post-preemption attainment >= 0.95x the fault-free baseline over
+        the same arrival window;
+      * zero `_journal_integrity` violations in either journal.
+
+    Reports attainment through each transition window and time-to-recover
+    (first obs window at/after the loss where the elastic serve is back
+    within 95% of the baseline's same window).
+    """
+    from collections import Counter
+
+    from repro.api import ObsConfig
+
+    cluster = (HC_LARGE | HC_SMALL)[cluster_name]
+    archs = GROUPS["G1"][:2]
+    horizon = 6.0 if quick else 10.0
+    window_s = 0.5
+    base_cfg = _config(cluster, archs,
+                       obs=ObsConfig(level="trace", window_s=window_s))
+    s0 = Session.from_config(base_cfg)
+    store = s0.profile()
+    mix = {archs[0]: 0.6, archs[1]: 0.4}
+    plan0 = s0.solve(objective=Objective(slo_margin=0.4).with_weights(mix))
+    # 0.65x planned throughput: high enough that the preempted host holds
+    # in-flight batches, with head-room so the post-loss cluster (minus one
+    # tpu-lo host) still clears the offered load after the mandatory replan
+    rate = plan0.throughput * 0.65
+    slos = {m: store.profiles[m].slo_s for m in archs}
+    rates = {m: rate * mix[m] for m in archs}
+    trace = multi_model_trace(rates, horizon, slos, seed=seed)
+
+    t_up, t_down, t_loss = 0.2 * horizon, 0.45 * horizon, 0.7 * horizon
+    grow = {"tpu-lo": cluster.chips_per_host}
+    shrink = {"tpu-lo": -cluster.chips_per_host}
+
+    def serve(elastic):
+        cfg = dataclasses.replace(
+            base_cfg,
+            replan=ReplanConfig(window_s=0.5, check_interval_s=0.25,
+                                min_requests=12),
+            # long cooldown so ordinary drift stays quiet: the only swaps
+            # we want to see are the scripted resizes and the mandatory
+            # loss-triggered one (which bypasses this gate by design)
+            replan_policy=PolicyConfig(cooldown_s=4.0,
+                                       solver_wall_init_s=0.2,
+                                       cost_ewma=0.0),
+        )
+        session = Session.from_config(cfg, store=store)
+        session.use_plan(plan0)
+        session.deploy(mode="sim")
+        session.enable_replanning(baseline_rates=rates)
+        state = {}
+        if elastic:
+            def script(req, now):
+                dp = session.dataplane
+                if "up" not in state and now >= t_up:
+                    state["up"] = session.resize(grow, now=now,
+                                                 reason="node_join")
+                elif "up" in state and "down" not in state and now >= t_down:
+                    state["down"] = session.resize(shrink, now=now,
+                                                   reason="node_drain")
+                elif ("down" in state and "loss" not in state
+                      and now >= t_loss):
+                    # counters JUST before the abrupt preemption: proves
+                    # both planned resizes lost zero in-flight work
+                    state["graceful"] = {
+                        "exec_failures": dp.tel.exec_failures,
+                        "node_loss_drops": dp.tel.node_loss_drops,
+                    }
+                    busy = Counter()
+                    for job in dp.jobs.values():
+                        for v in job.probe.path[job.stage_idx:]:
+                            if v.accel_class == "tpu-lo":
+                                busy[v.chip_id // cluster.chips_per_host] += 1
+                    host = max(busy, key=busy.get) if busy else None
+                    state["t_loss"] = now
+                    state["loss"] = dp.fail_host("tpu-lo", host_id=host,
+                                                 now=now)
+
+            session.on_arrival(script)
+        t0 = time.perf_counter()
+        rep = session.run(trace)
+        return session, rep, state, time.perf_counter() - t0
+
+    _, rep_base, _, wall_base = serve(elastic=False)
+    _, rep_el, state, wall_el = serve(elastic=True)
+    tel_b, tel_e = rep_base.telemetry, rep_el.telemetry
+
+    assert "loss" in state, "trace ended before the scripted preemption"
+    t_loss_eff = state["t_loss"]
+    loss = state["loss"]
+
+    def outcomes_by_arrival(journal):
+        ok = {e["req_id"]: e["ok"]
+              for e in journal.select(kind="req.complete")}
+        for e in journal.select(kind="req.drop"):
+            ok[e["req_id"]] = False
+        return [(e["t_s"], ok.get(e["req_id"], False))
+                for e in journal.select(kind="req.arrive")]
+
+    def attain_between(arr, lo, hi):
+        hit = [o for t, o in arr if lo <= t < hi]
+        return sum(hit) / len(hit) if hit else 1.0
+
+    arr_b = outcomes_by_arrival(rep_base.obs.journal)
+    arr_e = outcomes_by_arrival(rep_el.obs.journal)
+    post_base = attain_between(arr_b, t_loss_eff, horizon)
+    post_el = attain_between(arr_e, t_loss_eff, horizon)
+
+    # time-to-recover: first obs window at/after the loss where the elastic
+    # serve is back within 95% of the baseline's SAME window
+    recover_s = None
+    for wi in range(int(t_loss_eff / window_s),
+                    int(horizon / window_s) + 1):
+        lo, hi = wi * window_s, (wi + 1) * window_s
+        if (attain_between(arr_e, lo, hi)
+                >= 0.95 * attain_between(arr_b, lo, hi)):
+            recover_s = max(0.0, lo - t_loss_eff)
+            break
+    time_to_recover_s = (horizon - t_loss_eff if recover_s is None
+                         else recover_s)
+
+    violations = (_journal_integrity(rep_base.obs.journal, tel_b)
+                  + _journal_integrity(rep_el.obs.journal, tel_e))
+    assert not violations, f"journal integrity: {violations[:5]}"
+    assert loss["inflight_failed"] > 0, (
+        "preemption landed on an idle host — the recovery path never ran")
+    assert loss["readmitted"] + loss["dropped"] > 0, loss
+    assert tel_e.node_loss_drops == loss["dropped"], (
+        tel_e.node_loss_drops, loss)
+    graceful = state["graceful"]
+    assert graceful == {"exec_failures": 0, "node_loss_drops": 0}, (
+        f"graceful resizes lost in-flight work: {graceful}")
+    swap_reasons = [e["reason"]
+                   for e in rep_el.obs.journal.select(kind="plan.swap")]
+    assert any(r.startswith("node_loss@") for r in swap_reasons), swap_reasons
+    mandatory = [d for d in tel_e.replan_decisions
+                 if d.get("reason", "").startswith("mandatory:")]
+    assert mandatory and all(d["accepted"] for d in mandatory), mandatory
+    assert post_el >= 0.95 * post_base, (
+        f"post-preemption attainment {post_el:.3f} < "
+        f"0.95 x fault-free {post_base:.3f}")
+
+    phases = {
+        "steady": (0.0, t_up),
+        "scale_up": (t_up, t_down),
+        "scale_down": (t_down, t_loss_eff),
+        "post_loss": (t_loss_eff, horizon),
+    }
+    return {
+        "cluster": cluster_name,
+        "models": archs,
+        "rate_rps": rate,
+        "horizon_s": horizon,
+        "n_requests": len(trace),
+        "trace": describe(trace).as_dict(),
+        "transitions": {"t_up_s": t_up, "t_down_s": t_down,
+                        "t_loss_s": t_loss_eff},
+        "loss": loss,  # inflight_failed / readmitted / dropped
+        "graceful_phase": graceful,  # asserted all-zero above
+        "attainment_by_phase": {
+            name: {"baseline": attain_between(arr_b, lo, hi),
+                   "elastic": attain_between(arr_e, lo, hi)}
+            for name, (lo, hi) in phases.items()
+        },
+        "post_loss_attainment": post_el,
+        "post_loss_attainment_baseline": post_base,
+        "time_to_recover_s": time_to_recover_s,
+        "baseline": {**_tel_detail(tel_b), "wall_s": wall_base},
+        "elastic": {**_tel_detail(tel_e), "wall_s": wall_el,
+                    "resizes": tel_e.resizes,
+                    "node_losses": tel_e.node_losses,
+                    "node_loss_drops": tel_e.node_loss_drops,
+                    "retries": tel_e.retries},
+        "swap_reasons": swap_reasons,
+        "mandatory_decisions": mandatory,
+        "journal_violations": violations,  # asserted empty above
+    }
+
+
+def _elastic_line(el):
+    return (
+        f"e2e_elastic[{el['cluster']}|{'+'.join(el['models'])}],"
+        f"{(el['baseline']['wall_s'] + el['elastic']['wall_s'])*1e6:.0f},"
+        f"post_loss_attain={el['post_loss_attainment']:.3f};"
+        f"baseline={el['post_loss_attainment_baseline']:.3f};"
+        f"recover_s={el['time_to_recover_s']:.2f};"
+        f"resizes={el['elastic']['resizes']};"
+        f"loss_inflight={el['loss']['inflight_failed']};"
+        f"loss_readmitted={el['loss']['readmitted']};"
+        f"loss_dropped={el['loss']['dropped']};"
+        f"journal_violations={len(el['journal_violations'])}"
+    )
+
+
 def _stream_line(st):
     return (
         f"e2e_stream[{st['cluster']}|{'+'.join(st['models'])}],"
@@ -807,9 +1045,11 @@ def main(quick=False, full=False):
     out.append(_obs_line(obs))
     stream = run_stream(quick=quick)
     out.append(_stream_line(stream))
+    elastic = run_elastic(quick=quick)
+    out.append(_elastic_line(elastic))
     payload = {"bench": "e2e_load", "quick": quick, "horizon_s": HORIZON_S,
                "rows": results, "drift": drift, "oscillation": osc,
-               "obs": obs, "stream": stream}
+               "obs": obs, "stream": stream, "elastic": elastic}
     if full:
         # paper-scale (100-device, 3-model) re-planning scenarios — gated
         # behind --full because they replay ~100k-request traces; affordable
@@ -867,11 +1107,25 @@ if __name__ == "__main__":
                          "replanned >= static and journal integrity; writes "
                          "BENCH_stream.json, leaves BENCH_e2e.json "
                          "untouched)")
+    ap.add_argument("--elastic-only", action="store_true",
+                    help="run only the elastic chaos soak (scale-up, "
+                         "graceful scale-down, mid-serve tail-host "
+                         "preemption; asserts post-preemption attainment "
+                         ">= 0.95x the fault-free baseline, zero journal "
+                         "violations, and zero graceful-phase loss; writes "
+                         "BENCH_elastic.json, leaves BENCH_e2e.json "
+                         "untouched)")
     ap.add_argument("--assert-obs-overhead", type=float, default=None,
                     metavar="FRAC",
                     help="exit non-zero if traced-mode overhead exceeds this "
                          "fraction of untraced scheduled-req/s (CI guard)")
     args = ap.parse_args()
+    if args.elastic_only:
+        elastic_result = run_elastic(quick=args.quick)
+        BENCH_ELASTIC_JSON.write_text(json.dumps(elastic_result, indent=2))
+        print(_elastic_line(elastic_result))
+        print(f"e2e_elastic_json,0,wrote={BENCH_ELASTIC_JSON}")
+        sys.exit(0)
     if args.stream_only:
         stream_result = run_stream(quick=args.quick)
         BENCH_STREAM_JSON.write_text(json.dumps(stream_result, indent=2))

@@ -29,6 +29,7 @@ from repro.controlplane.planner import Objective  # noqa: F401
 from repro.controlplane.replan import PolicyConfig, ReplanConfig  # noqa: F401
 from repro.core.types import ClusterSpec  # noqa: F401
 from repro.dataplane.queues import AdmissionPolicy  # noqa: F401
+from repro.faults import FaultConfig, FaultEvent, FaultSchedule  # noqa: F401
 from repro.obs import ObsConfig  # noqa: F401
 from repro.stream import SourceConfig  # noqa: F401
 
@@ -65,4 +66,8 @@ __all__ = [
     "AdmissionPolicy",
     "ObsConfig",
     "SourceConfig",
+    # fault injection / elastic clusters (repro.faults)
+    "FaultConfig",
+    "FaultEvent",
+    "FaultSchedule",
 ]

@@ -25,6 +25,7 @@ from repro.controlplane.replan import PolicyConfig, ReplanConfig
 from repro.core import costmodel as cm
 from repro.core.types import ACCEL_CLASSES, ClusterSpec
 from repro.dataplane.queues import AdmissionPolicy
+from repro.faults import FaultConfig
 from repro.obs import ObsConfig
 from repro.stream.config import SourceConfig
 
@@ -112,6 +113,9 @@ class ServeConfig:
     # explicit Source is passed; None means serve() requires one.  ("source"
     # above predates this and names the ProfileStore pricing tables.)
     stream: SourceConfig | None = None
+    # deterministic fault injection (repro.faults) for Session.deploy();
+    # None means no injector is attached — the fault path stays inert
+    faults: FaultConfig | None = None
     # latency-table axes (ProfileStore): defaults are the paper's grids
     vfracs: tuple[int, ...] = cm.VFRACS
     batch_sizes: tuple[int, ...] = cm.BATCH_SIZES
@@ -175,6 +179,14 @@ class ServeConfig:
                 self.stream.validate()
             except ValueError as exc:
                 raise ConfigError(str(exc)) from exc
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultConfig):
+                raise ConfigError("faults must be a FaultConfig, got "
+                                  f"{type(self.faults).__name__}")
+            try:
+                self.faults.validate()
+            except ValueError as exc:
+                raise ConfigError(str(exc)) from exc
         if not self.vfracs or any(v < 1 for v in self.vfracs):
             raise ConfigError(f"invalid vfracs {self.vfracs!r}")
         if not self.batch_sizes or any(b < 1 for b in self.batch_sizes):
@@ -217,6 +229,7 @@ class ServeConfig:
         # optional for backward compat with pre-obs configs (defaults = off)
         obs = d.pop("obs", None)
         stream = d.pop("stream", None)
+        faults = d.pop("faults", None)
         try:
             cfg = cls(
                 cluster=ClusterSpec(**d.pop("cluster")),
@@ -230,6 +243,8 @@ class ServeConfig:
                 obs=(ObsConfig(**obs) if obs is not None else ObsConfig()),
                 stream=(SourceConfig.from_dict(stream)
                         if stream is not None else None),
+                faults=(FaultConfig.from_dict(faults)
+                        if faults is not None else None),
                 vfracs=tuple(d.pop("vfracs")),
                 batch_sizes=tuple(d.pop("batch_sizes")),
                 token_fn=token_fn,

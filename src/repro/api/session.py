@@ -317,6 +317,7 @@ class Session:
         self._compile_lock = threading.Lock()
         self._prepared: _PreparedSwap | None = None
         self._key = None
+        self._injector = None  # FaultInjector when config.faults is set
 
     # ------------------------------------------------------------- plumbing
     @classmethod
@@ -492,6 +493,13 @@ class Session:
         self._dp.arrival_hooks.append(self._observe_arrival)
         self._mode = mode
         self._state = _DEPLOYED
+        if cfg.faults is not None:
+            from repro.faults import FaultInjector
+
+            # planned membership events (node_join/node_drain) route through
+            # Session.resize; abrupt ones the injector applies to the plane
+            self._injector = FaultInjector.from_config(
+                cfg.faults, on_resize=self._on_fault_resize).attach(self._dp)
         return self
 
     def shutdown(self) -> None:
@@ -857,6 +865,79 @@ class Session:
         )
         self.swaps.append(rec)
         self._plan = plan
+        return rec
+
+    # ------------------------------------------------------ elastic resize
+    def _on_fault_resize(self, ev, now: float) -> None:
+        """FaultInjector callback for planned membership events: translate a
+        node_join/node_drain FaultEvent into a per-class chip delta."""
+        cph = self.config.cluster.chips_per_host
+        delta = ev.count * cph * (1 if ev.kind == "node_join" else -1)
+        self.resize({ev.accel_class: delta}, now=now, reason=ev.kind)
+
+    def resize(self, cluster_delta: dict[str, int], *,
+               now: float | None = None, reason: str = "resize"
+               ) -> SwapRecord:
+        """Planned elastic resize: apply a per-class chip-count delta to the
+        live cluster, re-solve on the new inventory (warm-started from the
+        incumbent plan when it still fits), and install via the managed
+        drain-and-swap path.
+
+        Scale-down is graceful by construction: the swap retires departing
+        pools through the epoch lifecycle, so in-flight batches finish on
+        the old runtime and queued requests re-admit to the new one — zero
+        in-flight loss (contrast `DataPlane.fail_host`, the abrupt path).
+        The session's frozen config is replaced with the resized cluster so
+        later solves/replans plan against the new inventory."""
+        self._require_deployed("resize")
+        cfg = self.config
+        counts = dict(cfg.cluster.counts)
+        for cname, delta in cluster_delta.items():
+            n = counts.get(cname, 0) + delta
+            if n > 0:
+                counts[cname] = n
+            else:
+                counts.pop(cname, None)
+        if not counts:
+            raise ConfigError(
+                f"resize {cluster_delta} removes every accelerator class")
+        new_cluster = ClusterSpec(counts=counts,
+                                  chips_per_host=cfg.cluster.chips_per_host,
+                                  nic_derate=cfg.cluster.nic_derate)
+        now = self._vnow if now is None else now
+        if self._observer is not None:
+            self._observer.on_resize_start(now, dict(cfg.cluster.counts),
+                                           dict(counts), reason)
+        store = self.store
+        obj = self._weights(cfg.objective)
+        # the live plan warm-starts the re-solve only when it still fits the
+        # resized inventory — an over-allocating incumbent would hand the
+        # solver an unattainable objective cutoff
+        incumbent = self._plan
+        if incumbent is not None and not all(
+                incumbent.cluster.counts.get(c, 0) <= counts.get(c, 0)
+                for c in incumbent.cluster.counts):
+            incumbent = None
+        plan = self._planner.plan(dict(store.profiles),
+                                  store.tables(cfg.source), new_cluster,
+                                  objective=obj, incumbent=incumbent)
+        if not plan.pipelines:
+            raise LifecycleError(
+                f"resize to {counts} is infeasible: the solver found no "
+                "feasible plan — the old plan keeps serving")
+        # adopt the new inventory before the install so an attached replan
+        # loop (and any later solve) prices against it
+        self.config = replace(cfg, cluster=new_cluster).validate()
+        if self._replan_loop is not None:
+            self._replan_loop.cluster = new_cluster
+        rec = self.swap(plan=plan, now=now, reason=f"{reason}@{now:.3f}s",
+                        slo_margin=obj.slo_margin)
+        self._dp.tel.resizes += 1
+        if self._observer is not None:
+            swaps = self._dp.obs.journal.select("plan.swap")
+            carried = swaps[-1]["carried"] if swaps else 0
+            self._observer.on_resize_complete(
+                now, dict(counts), carried, self._planner.last_wall_s)
         return rec
 
     # ------------------------------------------------------- managed replan

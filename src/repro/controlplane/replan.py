@@ -421,6 +421,24 @@ class ReplanPolicy:
         hysteresis window of the next genuine one."""
         self.failures += 1
 
+    def record_mandatory(self, now: float, reason: str) -> ReplanDecision:
+        """A topology-loss replan is *mandatory*: the live plan references
+        hardware that no longer exists, so feasibility — not benefit — is at
+        stake.  Records an accepted decision WITHOUT consulting or touching
+        the benefit gate, the cooldown or the oscillation damper: a holdoff
+        opened by an earlier rejected drift (or a recent swap's stretched
+        cooldown) must never defer restoring feasibility."""
+        d = ReplanDecision(
+            t_s=now, accepted=True, reason=f"mandatory:{reason}",
+            flip_score=self.flip_score,
+            cooldown_until_s=self._cooldown_until,
+        )
+        self.decisions.append(d)
+        # the window-rejection dedup keys off decisions[-1]; a mandatory
+        # record in between must not be replayed as that cached rejection
+        self._reject_logged_until = float("-inf")
+        return d
+
 
 @dataclass
 class ReplanLoop:
@@ -455,8 +473,10 @@ class ReplanLoop:
 
     # ---------------------------------------------------------------- wiring
     def attach(self) -> "ReplanLoop":
-        """Register on the data plane's arrival stream; returns self."""
+        """Register on the data plane's arrival stream (drift cadence) and
+        its node-loss hooks (mandatory replans); returns self."""
         self.dataplane.arrival_hooks.append(self.on_arrival)
+        self.dataplane.loss_hooks.append(self.on_node_loss)
         return self
 
     def set_baseline(self, rates: dict[str, float]) -> None:
@@ -520,7 +540,45 @@ class ReplanLoop:
                 return None
         return self.replan(now)
 
-    def replan(self, now: float) -> ClusterPlan | None:
+    # ------------------------------------------------------- mandatory path
+    def on_node_loss(self, now: float, accel_class, host_id, lost) -> None:
+        """DataPlane loss hook: shrink the planning inventory by the lost
+        chips and force a mandatory replan before the victims re-admit."""
+        counts = dict(self.cluster.counts)
+        for cname in {c for c, _ in lost}:
+            n_lost = sum(1 for c, cid in lost
+                         if c == cname and cid < counts.get(cname, 0))
+            if n_lost:
+                left = counts[cname] - n_lost
+                if left > 0:
+                    counts[cname] = left
+                else:
+                    counts.pop(cname, None)
+        self.force_replan(now, reason="node_loss", cluster=ClusterSpec(
+            counts=counts, chips_per_host=self.cluster.chips_per_host,
+            nic_derate=self.cluster.nic_derate))
+
+    def force_replan(self, now: float, *, reason: str = "node_loss",
+                     cluster: ClusterSpec | None = None) -> ClusterPlan | None:
+        """Mandatory replan: the live plan references hardware that no
+        longer exists (or the topology changed under it), so feasibility —
+        not benefit — is at stake.  Bypasses the drift check, the policy's
+        benefit gate, the cooldown and the oscillation damper, and also the
+        max_swaps / consecutive-failure circuit breakers: serving cannot
+        continue on the old plan, so deferring is never the right call."""
+        if cluster is not None:
+            self.cluster = cluster
+        if self.policy is not None:
+            decision = self.policy.record_mandatory(now, reason)
+            self.dataplane.tel.replan_decisions.append(decision.as_dict())
+            obs = getattr(self.dataplane, "obs", None)
+            if obs is not None:
+                obs.on_replan_decision(now, decision.as_dict())
+        return self.replan(now, reason=f"{reason}@{now:.3f}s",
+                           mandatory=True)
+
+    def replan(self, now: float, *, reason: str | None = None,
+               mandatory: bool = False) -> ClusterPlan | None:
         """Unconditional re-solve at the observed mix, then swap_plan.
 
         A control-loop failure must never take the serving loop down: any
@@ -543,19 +601,27 @@ class ReplanLoop:
             self.store.reprice_runtime
             if self.config.source == "measured" else None)
         obs = getattr(self.dataplane, "obs", None)
+        # warm start: the live plan is a feasible point of the new solve
+        # whenever the drift was workload-only, so the solver prices the
+        # re-solve as a perturbation (template cache + priority columns +
+        # objective cutoff) instead of from scratch — keeping the wall the
+        # policy's cost EWMA learns honestly small.  But an incumbent that
+        # over-allocates the (possibly shrunk) cluster would hand the solver
+        # an unattainable objective cutoff, so it is only passed when it
+        # still fits the current inventory.
+        incumbent = self.dataplane.rt.plan
+        if incumbent is not None and not all(
+                incumbent.cluster.counts.get(c, 0)
+                <= self.cluster.counts.get(c, 0)
+                for c in incumbent.cluster.counts):
+            incumbent = None
         try:
             plan = self.planner.plan(
                 profiles,
                 self.store.tables(self.config.source),
                 self.cluster,
                 objective=self.objective.with_weights(weights),
-                # warm start: the live plan is a feasible point of the new
-                # solve whenever the drift was workload-only, so the solver
-                # prices the re-solve as a perturbation (template cache +
-                # priority columns + objective cutoff) instead of from
-                # scratch — keeping the wall the policy's cost EWMA learns
-                # honestly small
-                incumbent=self.dataplane.rt.plan,
+                incumbent=incumbent,
             )
             if not plan.pipelines:
                 # Infeasible at this workload: keep the old plan, but adopt
@@ -576,7 +642,7 @@ class ReplanLoop:
                 dispatcher_factory=self.dispatcher_factory,
                 runtime_setup=setup,
                 slo_margin=self.objective.slo_margin,
-                reason=f"drift@{now:.3f}s",
+                reason=reason or f"drift@{now:.3f}s",
             )
         except Exception as exc:  # noqa: BLE001 — keep serving the old plan
             # Adopt the observed workload as the new baseline anyway: a
@@ -595,7 +661,10 @@ class ReplanLoop:
             obs.on_replan_success(now, self.planner.last_wall_s,
                                   plan.throughput)
         self.set_baseline(rates)
-        if self.policy is not None:
+        # a mandatory (topology-change) swap does not feed the oscillation
+        # damper: the mix flip it observes is an artifact of the hardware
+        # event, not of workload ping-pong
+        if self.policy is not None and not mandatory:
             transients = self.dataplane.tel.swap_transient_s
             self.policy.notify_swap(
                 now, old_mix=old_mix, new_mix=dict(self._baseline_mix),

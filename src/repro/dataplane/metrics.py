@@ -48,6 +48,17 @@ class Telemetry:
     expiry_drops: int = 0
     sched_drops: int = 0
     exec_failures: int = 0
+    # elastic-cluster fault accounting (repro.faults / DESIGN.md §13):
+    # requests dropped because their node was preempted and the certified
+    # re-admission bound said the deadline was unreachable; injected fault
+    # events; node-loss episodes; bounded-retry attempts and exhaustions;
+    # and completed Session.resize transitions
+    node_loss_drops: int = 0
+    faults_injected: int = 0
+    node_losses: int = 0
+    retries: int = 0
+    retry_exhausted: int = 0
+    resizes: int = 0
     inflight_hwm: int = 0
     probes_per_dispatch: float = 0.0
     # Algorithm-1 hot-path counters accumulated across plan epochs (probe
@@ -205,6 +216,14 @@ class Telemetry:
                 "expired": self.expiry_drops,
                 "scheduler": self.sched_drops,
                 "exec_failure": self.exec_failures,
+                "node_loss": self.node_loss_drops,
+            },
+            "faults": {
+                "injected": self.faults_injected,
+                "node_losses": self.node_losses,
+                "retries": self.retries,
+                "retry_exhausted": self.retry_exhausted,
+                "resizes": self.resizes,
             },
             "requested_horizon_s": self.requested_horizon_s,
             "backpressure_events": [list(e) for e in self.backpressure_events],

@@ -64,6 +64,10 @@ class _Job:
     fb: FeedbackController | None = None
     stage_idx: int = 0
     clock: float = 0.0  # virtual time the batch finished its previous hop
+    # highest stage index that actually started executing (-1 = none): a
+    # started stage's planned interval was already replaced by its actual
+    # one (Timeline.correct), so cancelling the job must leave it booked
+    started: int = -1
 
 
 def _default_tokens(n: int, seq_len: int):
@@ -169,6 +173,25 @@ class DataPlane:
         # and its admit.resume); plane-level so it survives swap_plan's queue
         # rebuild and the post-swap poll can emit the resume edge
         self._bp_shedding: dict[str, bool] = {}
+        # ---- elastic-cluster fault state (repro.faults, DESIGN.md §13) ----
+        # attached FaultInjector (set by FaultInjector.attach): consulted
+        # once per dispatch for transient exec failures and for the bounded
+        # retry budget; None keeps the legacy fail-the-batch behaviour
+        self.faults = None
+        # straggler multipliers keyed by physical chip (class, chip_id):
+        # actual stage durations on these chips are inflated, and the slip
+        # flows through Timeline.correct + the cross-epoch free maps exactly
+        # like measured-feedback slip
+        self._slowdowns: dict[tuple[str, int], float] = {}
+        # remaining retry budget per req_id (only requests that failed at
+        # least once appear; entries clear at completion or exhaustion)
+        self._retry_left: dict[int, int] = {}
+        # called as hook(now, accel_class, host_id, lost_chips) after a node
+        # loss cancelled its in-flight work and released reservations, but
+        # BEFORE the victims are re-admitted — the ReplanLoop registers its
+        # mandatory replan here so victims re-enter queues priced on the
+        # post-loss topology
+        self.loss_hooks: list = []
         self._install_runtime(runtime, dispatcher)
 
     def _install_runtime(self, runtime: ClusterRuntime,
@@ -603,15 +626,19 @@ class DataPlane:
     def _dispatch(self, now: float, action: Dispatch) -> None:
         pr = action.probe_result
         exec_id = None
+        if self.faults is not None and self.faults.exec_fault_due():
+            # injected transient stage-exec failure (deterministic from the
+            # injector's seed): capacity back, then bounded retry
+            reservation.cancel(pr)
+            self._retry_batch(now, action)
+            return
         if self.dispatcher is not None:
             tokens = self.token_fn(len(action.requests), self.seq_len)
             try:
                 exec_id = self.dispatcher.submit(action, tokens)
             except Exception:  # noqa: BLE001 — executor died: return capacity
                 reservation.cancel(pr)
-                self.tel.exec_failures += 1  # per BATCH; drops are per request
-                for r in action.requests:
-                    self._drop(r, now, "exec_failure")
+                self._retry_batch(now, action)
                 return
         # telemetry only for batches that actually execute
         depth_after = self.batcher.pending(action.pipeline.model_name)
@@ -647,6 +674,170 @@ class DataPlane:
                            self.batcher.total_pending()))
         self._start_stage(now, job)
 
+    def _retry_batch(self, now: float, action: Dispatch) -> None:
+        """Transient exec failure: bounded retry-with-hedging (DESIGN §13).
+
+        Each failed request with budget left re-enters the EDF queue through
+        the normal admission path — the next scheduling round re-probes
+        EVERY pool, so the retry is hedged across pool members rather than
+        pinned to the member that just failed (or is straggling).  Without
+        an attached injector the budget is 0, reproducing the legacy
+        fail-the-batch behaviour exactly.  Requests out of budget drop with
+        the explicit ``exec_failure`` cause — never silently."""
+        self.tel.exec_failures += 1  # per BATCH; drops are per request
+        budget = self.faults.max_retries if self.faults is not None else 0
+        readmit: list[Request] = []
+        exhausted: list[Request] = []
+        for r in action.requests:
+            left = self._retry_left.get(r.req_id, budget)
+            if left > 0:
+                self._retry_left[r.req_id] = left - 1
+                readmit.append(r)
+            else:
+                exhausted.append(r)
+        if self.obs is not None:
+            self.obs.on_retry_attempt(now, -1, action.pipeline.pipeline_id,
+                                      len(action.requests), len(readmit))
+        for r in exhausted:
+            self._retry_left.pop(r.req_id, None)
+            self.tel.retry_exhausted += 1
+            if self.obs is not None:
+                self.obs.on_retry_exhausted(now, r.req_id, budget + 1)
+            self._drop(r, now, "exec_failure")
+        if readmit:
+            self.tel.retries += 1
+            for r in readmit:
+                self._admit(r, now)
+            # a WAKE at `now` re-runs the scheduler once the current round's
+            # actions finish — flat stack, and the retry budget bounds the
+            # number of rounds even at exec_fault_rate 1.0
+            model = action.pipeline.model_name
+            cur = self._wakes.get(model)
+            if cur is None or now < cur - 1e-9:
+                self._wakes[model] = now
+                self.push(now, self.WAKE, model)
+
+    # ------------------------------------------------------- abrupt node loss
+    def fail_host(self, accel_class: str, host_id: int | None = None,
+                  now: float = 0.0) -> dict:
+        """Spot-preempt one whole host of `accel_class` (DESIGN.md §13).
+
+        `host_id` defaults to the class's tail host — the recommended target
+        because `build_runtime` numbers chips sequentially per class, so
+        losing the tail keeps every surviving chip's physical identity
+        stable across the mandatory replan."""
+        cluster = self.rt.cluster
+        cph = cluster.chips_per_host if cluster is not None else 4
+        n = cluster.counts.get(accel_class, 0) if cluster is not None else 0
+        if host_id is None:
+            host_id = max(n - 1, 0) // cph
+        lost = {(accel_class, cid)
+                for cid in range(host_id * cph, (host_id + 1) * cph)}
+        return self.fail_chips(lost, now, accel_class=accel_class,
+                               host_id=host_id)
+
+    def fail_chips(self, lost, now: float, *, accel_class: str | None = None,
+                   host_id: int | None = None) -> dict:
+        """Abrupt loss of physical chips: cancel the in-flight batches that
+        still need them, release their not-yet-run reservations, fire the
+        mandatory-replan hooks, then re-admit each victim request iff the
+        certified queue bound (`ModelQueue.completion_lb_s`, DESIGN §12)
+        says its deadline is still reachable — otherwise it drops with the
+        explicit ``node_loss`` cause.  Every in-flight request on the lost
+        chips therefore resolves to exactly one outcome (no silent loss)."""
+        lost = set(lost)
+        affected = [
+            job for job in self.jobs.values()
+            if any((v.accel_class, v.chip_id) in lost
+                   for v in job.probe.path[job.stage_idx:])
+        ]
+        victims: list[Request] = []
+        epochs: set[int] = set()
+        for job in affected:
+            self._release_unstarted(job)
+            del self.jobs[job.job_id]
+            self._epoch_inflight[job.epoch] = (
+                self._epoch_inflight.get(job.epoch, 1) - 1)
+            epochs.add(job.epoch)
+            victims.extend(job.requests)
+        for epoch in epochs:
+            self._maybe_gc_epoch(epoch)
+        # the dead chips' physical identity must not throttle whatever the
+        # replanned epoch maps onto their ids (tail-stable renumbering)
+        for key in lost:
+            self._phys_chip.pop(key, None)
+            self._slowdowns.pop(key, None)
+        if accel_class is not None and host_id is not None:
+            self._phys_nic_ul.pop((accel_class, host_id), None)
+            self._phys_nic_dl.pop((accel_class, host_id), None)
+        self.tel.node_losses += 1
+        for hook in list(self.loss_hooks):
+            hook(now, accel_class, host_id, lost)
+        readmitted = dropped = 0
+        models: list[str] = []
+        for req in victims:
+            q = self.batcher.queues.by_model.get(req.model_name)
+            if q is not None and \
+                    q.completion_lb_s(len(q), now) <= req.deadline_s + 1e-9:
+                self._admit(req, now)
+                readmitted += 1
+                if req.model_name not in models:
+                    models.append(req.model_name)
+            else:
+                self._drop(req, now, "node_loss")
+                dropped += 1
+        for m in models:
+            self._run_scheduler(m, now)
+        if self.obs is not None:
+            self.obs.on_pool_drain(
+                now, accel_class if accel_class is not None else "*",
+                host_id if host_id is not None else -1,
+                len(affected), readmitted, dropped)
+        return {"inflight_failed": len(affected),
+                "readmitted": readmitted, "dropped": dropped}
+
+    @staticmethod
+    def _release_unstarted(job: _Job) -> None:
+        """Release the planned reservations a cancelled job never used.
+
+        Only not-yet-started work may be released: started stages/transfers
+        had their planned intervals replaced by actuals (Timeline.correct),
+        and releasing the actual region of work that already ran would
+        double-book the surviving resource under it.  Reservation order per
+        stage is [ul, dl,] gpu (core.reservation.probe), so the stage
+        counter advances on each "gpu" record; a transfer into stage k ran
+        iff ``stage_idx`` already reached k (it is corrected synchronously
+        in `_on_stage_done`)."""
+        si = 0
+        for r in job.probe.reservations:
+            if r.kind == "gpu":
+                if si > job.started:
+                    r.resource.release(r.start, r.dur)
+                si += 1
+            elif si > job.stage_idx:  # ul/dl of the transfer INTO stage si
+                r.resource.release(r.start, r.dur)
+
+    def set_chip_slowdown(self, accel_class: str, chip_id: int | None,
+                          factor: float) -> None:
+        """Mark physical chips as stragglers: actual stage durations on them
+        are multiplied by `factor` (>= 1); `chip_id` None hits every chip of
+        the class, factor 1.0 clears.  The slip is visible to the scheduler
+        the same way measured-feedback slip is — via Timeline.correct and
+        the cross-epoch free maps — so subsequent probes route around the
+        straggler (the pool-level hedge PPipe's probe() gives for free)."""
+        if chip_id is not None:
+            chips = [chip_id]
+        else:
+            cluster = self.rt.cluster
+            chips = range(cluster.counts.get(accel_class, 0)
+                          if cluster is not None else 0)
+        for cid in chips:
+            key = (accel_class, cid)
+            if factor == 1.0:
+                self._slowdowns.pop(key, None)
+            else:
+                self._slowdowns[key] = factor
+
     # -------------------------------------------------------------- execution
     def _stage_dur(self, job: _Job, k: int) -> float:
         """Virtual duration of stage k: planned, or calibrated-measured when
@@ -673,6 +864,11 @@ class DataPlane:
             start = max(start, self._phys_wait(self._phys_chip, chip,
                                                job.epoch))
         dur = self._stage_dur(job, k)
+        if self._slowdowns:
+            # straggler chip (fault injection): the actual duration slips
+            # past the reservation, exactly like measured-feedback slip
+            dur *= self._slowdowns.get(chip, 1.0)
+        job.started = k
         self.vdev_virtual_free[(job.epoch, gpu.vdev_id)] = start + dur
         self._phys_note(self._phys_chip, chip, job.epoch, start + dur)
         gpu.busy_s += dur
@@ -685,7 +881,9 @@ class DataPlane:
 
     def _on_stage_done(self, t: float, payload: tuple) -> None:
         job_id, _, _ = payload
-        job = self.jobs[job_id]
+        job = self.jobs.get(job_id)
+        if job is None:
+            return  # batch cancelled by node loss; its heap events are stale
         job.clock = t
         job.stage_idx += 1
         if job.stage_idx >= len(job.probe.path):
@@ -727,11 +925,16 @@ class DataPlane:
         self.push(start + dur, self.XFER_DONE, job_id)
 
     def _on_xfer_done(self, t: float, job_id: int) -> None:
-        job = self.jobs[job_id]
+        job = self.jobs.get(job_id)
+        if job is None:
+            return  # batch cancelled by node loss; its heap events are stale
         job.clock = t
         self._start_stage(t, job)
 
     def _complete(self, job: _Job, t: float) -> None:
+        if self._retry_left:
+            for req in job.requests:
+                self._retry_left.pop(req.req_id, None)
         for req in job.requests:
             self.tel.outcomes.append(RequestOutcome(
                 req_id=req.req_id,
@@ -755,6 +958,7 @@ class DataPlane:
         "overflow_shed": "overflow_sheds",
         "expired": "expiry_drops",
         "scheduler": "sched_drops",
+        "node_loss": "node_loss_drops",
     }
 
     def _drop(self, req: Request, now: float, cause: str) -> None:

@@ -10,7 +10,8 @@ kind                payload (beyond t_s)
 ==================  =========================================================
 req.arrive          req_id, model, deadline_s
 req.drop            req_id, cause (admission_reject | backpressure_reject |
-                    overflow_shed | expired | scheduler | exec_failure)
+                    overflow_shed | expired | scheduler | exec_failure |
+                    node_loss)
 req.complete        req_id, batch_id, ok
 batch.dispatch      batch_id, epoch, pipeline_id, batch_size, req_ids,
                     queue_depth, planned_finish_s
@@ -31,6 +32,17 @@ admit.shed          model, queue_depth, shed_total,
                     high watermark and entered backpressure
 admit.resume        model, queue_depth — the queue drained to the resume
                     watermark; backpressure released
+fault.inject        fault_kind (node_join | node_drain | node_loss |
+                    chip_slowdown | exec_fault) + the FaultEvent payload
+                    (accel_class, host_id, chip_id, factor, count)
+pool.drain          accel_class, host_id, inflight_failed, readmitted,
+                    dropped — a host's pools were retired abruptly
+resize.start        old_counts, new_counts, reason — Session.resize began
+resize.complete     new_counts, carried, solver_wall_s — the resized plan
+                    is installed; `carried` queued requests were re-admitted
+retry.attempt       batch_id, pipeline_id, n_requests, readmitted — a
+                    transient exec failure triggered a hedged retry
+retry.exhausted     req_id, attempts — the request's retry budget ran out
 ==================  =========================================================
 
 Values are strict-JSON by construction: tuples become lists at record time

@@ -148,6 +148,53 @@ class Observer:
         self.push({"t_s": t, "kind": "admit.resume", "model": model,
                    "queue_depth": depth})
 
+    # ------------------------------------------- elastic / fault-path hooks
+    def on_fault(self, t: float, fault_kind: str, event: dict) -> None:
+        """A scheduled fault event was delivered (repro.faults)."""
+        ev = {"t_s": t, "kind": "fault.inject", "fault_kind": fault_kind}
+        for k, v in event.items():
+            if k not in ("t_s", "kind"):
+                ev[k] = _jsonable(v)
+        self.push(ev)
+
+    def on_pool_drain(self, t: float, accel_class: str, host_id: int,
+                      inflight_failed: int, readmitted: int,
+                      dropped: int) -> None:
+        """A host's pools were retired abruptly (node loss): how many
+        in-flight batches were failed, and how their requests resolved."""
+        self.push({"t_s": t, "kind": "pool.drain",
+                   "accel_class": accel_class, "host_id": host_id,
+                   "inflight_failed": inflight_failed,
+                   "readmitted": readmitted, "dropped": dropped})
+
+    def on_resize_start(self, t: float, old_counts: dict, new_counts: dict,
+                        reason: str) -> None:
+        self.push({"t_s": t, "kind": "resize.start",
+                   "old_counts": dict(old_counts),
+                   "new_counts": dict(new_counts), "reason": reason})
+
+    def on_resize_complete(self, t: float, new_counts: dict,
+                           carried: int, solver_wall_s: float) -> None:
+        self.push({"t_s": t, "kind": "resize.complete",
+                   "new_counts": dict(new_counts), "carried": carried,
+                   "solver_wall_s": solver_wall_s})
+
+    def on_retry_attempt(self, t: float, batch_id: int, pipeline_id: int,
+                         n_requests: int, readmitted: int) -> None:
+        """A transient stage-exec failure: the batch's reservation was
+        cancelled and `readmitted` of its requests re-entered the EDF queue
+        (hedged — the scheduler re-probes every pool, not just the failed
+        one)."""
+        self.push({"t_s": t, "kind": "retry.attempt", "batch_id": batch_id,
+                   "pipeline_id": pipeline_id, "n_requests": n_requests,
+                   "readmitted": readmitted})
+
+    def on_retry_exhausted(self, t: float, req_id: int,
+                           attempts: int) -> None:
+        """A request used up its retry budget; it drops as exec_failure."""
+        self.push({"t_s": t, "kind": "retry.exhausted", "req_id": req_id,
+                   "attempts": attempts})
+
     # ------------------------------------------------------ materialization
     def _flush(self) -> None:
         """Replay the deferred buffer into windows + journal (in order)."""

@@ -27,21 +27,11 @@ from typing import Callable
 import jax
 import numpy as np
 
+# the deterministic-schedule core lives in repro.faults so serving and
+# training share one injector; re-exported here for the training loop
+from repro.faults import FailureInjector  # noqa: F401
+
 from . import checkpoint as ckpt_lib
-
-
-class FailureInjector:
-    """Deterministic failure schedule for tests: fail at given steps."""
-
-    def __init__(self, fail_at: set[int] | None = None):
-        self.fail_at = fail_at or set()
-        self.failures: list[int] = []
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at:
-            self.fail_at.discard(step)
-            self.failures.append(step)
-            raise RuntimeError(f"injected node failure at step {step}")
 
 
 @dataclass

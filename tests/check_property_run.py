@@ -35,6 +35,7 @@ REQUIRED = {
     "test_stream": "test_watermark_invariants_hold_under_arbitrary_offers",
     "test_epoch_lifecycle": "test_property_no_chip_or_nic_double_booking",
     "test_milp": "test_weight_scale_invariance",
+    "test_faults": "test_property_every_request_resolves_exactly_once",
 }
 
 

@@ -365,6 +365,9 @@ EXPECTED_ALL = [
     "AdmissionPolicy",
     "ClusterSpec",
     "ConfigError",
+    "FaultConfig",
+    "FaultEvent",
+    "FaultSchedule",
     "LifecycleError",
     "ModelSpec",
     "Objective",
@@ -394,6 +397,7 @@ EXPECTED_SIGNATURES = {
     "Session.drain": "(self) -> 'Report'",
     "Session.report": "(self) -> 'Report'",
     "Session.swap": "(self, plan: 'ClusterPlan | None' = None, *, now: 'float | None' = None, reason: 'str | None' = None, objective: 'Objective | None' = None, slo_margin: 'float | None' = None) -> 'SwapRecord'",
+    "Session.resize": "(self, cluster_delta: 'dict[str, int]', *, now: 'float | None' = None, reason: 'str' = 'resize') -> 'SwapRecord'",
     "Session.prepare_swap": "(self, plan: 'ClusterPlan') -> '_PreparedSwap'",
     "Session.enable_replanning": "(self, baseline_rates: 'dict[str, float] | None' = None) -> 'ReplanLoop'",
     "Session.shutdown": "(self) -> 'None'",
@@ -424,5 +428,5 @@ def test_config_field_surface_snapshot():
     assert [f.name for f in dataclasses.fields(ServeConfig)] == [
         "cluster", "models", "backend", "objective", "source", "feedback",
         "admission", "replan", "replan_policy", "gc_interval_s", "obs",
-        "stream", "vfracs", "batch_sizes", "serve_seq_len", "max_inflight",
-        "quantize_boundary", "calibrate", "seed", "token_fn"]
+        "stream", "faults", "vfracs", "batch_sizes", "serve_seq_len",
+        "max_inflight", "quantize_boundary", "calibrate", "seed", "token_fn"]

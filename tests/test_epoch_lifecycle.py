@@ -277,3 +277,45 @@ def test_property_no_chip_or_nic_double_booking(slip, swap_offsets, seed):
     # and the GC invariant holds under the same randomness
     assert dp._retired_runtimes == {}
     assert tel.epochs_gcd == tel.plan_swaps
+
+
+@settings(max_examples=8, deadline=None)
+@given(slip=st.floats(1.0, 3.0),
+       lose_t=st.floats(0.5, 2.0),
+       regain_dt=st.floats(0.3, 1.5),
+       seed=st.integers(0, 10_000))
+def test_property_no_double_booking_when_chips_lost_and_regained(
+        slip, lose_t, regain_dt, seed):
+    """The non-overlap property extended to elastic clusters: a tail host is
+    abruptly LOST mid-run (in-flight batches cancelled, unstarted
+    reservations released) and its chips later REGAINED by a swap to a
+    full-cluster plan.  Cancellation must release only not-yet-started
+    planned intervals — already-corrected actuals of cancelled jobs stay
+    booked — or the regained chips' new-epoch bookings would overlap the
+    pre-loss epoch's, which the journal audit would catch."""
+    profs, plan_a, plan_b = _setup()
+    trace = _trace(profs, plan_a, 4.0, load=0.8, seed=seed)
+    dp = SlippingPlane(build_runtime(plan_a, profs),
+                       observer=Observer(ObsConfig(level="trace")))
+    dp.slip = slip
+    state = {"lost": False, "regained": False}
+
+    def script(req, now):
+        if not state["lost"] and now >= lose_t:
+            state["lost"] = True
+            state["loss"] = dp.fail_host("tpu-lo", now=now)
+        elif state["lost"] and not state["regained"] and \
+                now >= lose_t + regain_dt:
+            state["regained"] = True
+            dp.swap_plan(plan_b, profs, now, reason=f"regain@{now:.3f}s")
+
+    dp.arrival_hooks.append(script)
+    tel = dp.serve(trace)
+    assert state["lost"]
+    assert _cross_epoch_overlaps(dp.obs.journal.events) == []
+    # outcome uniqueness holds across the loss: every victim of the failed
+    # host either re-admitted (and resolved) or dropped with cause node_loss
+    assert len(tel.outcomes) == len(trace)
+    assert len({o.req_id for o in tel.outcomes}) == len(trace)
+    loss = state["loss"]
+    assert tel.node_loss_drops == loss["dropped"]

@@ -290,6 +290,52 @@ def test_sustained_shift_still_replans_through_the_gate():
         plan.throughput_of("m1") - 1e-9
 
 
+def test_mandatory_replan_bypasses_cooldown_opened_by_rejected_drift():
+    """Regression: a node-loss replan is about feasibility, not benefit —
+    it must install immediately even inside the cooldown window an earlier
+    REJECTED drift replan opened, and the mandatory record must not corrupt
+    the window's rejection dedup afterwards."""
+    profs, store, planner, plan = _two_model_setup()
+    dp = DataPlane(build_runtime(plan, profs))
+    # min_gain_rps so high every drift prices as marginal -> rejection
+    policy = ReplanPolicy(PolicyConfig(cooldown_s=5.0, min_gain_rps=1e9))
+    loop = ReplanLoop(
+        planner=planner, store=store, cluster=CLUSTER, dataplane=dp,
+        config=ReplanConfig(window_s=1.0, check_interval_s=0.1,
+                            min_requests=4),
+        policy=policy,
+    ).attach()
+    loop.set_baseline({m: plan.throughput_of(m) for m in profs})
+    rates = {m: plan.throughput_of(m) * (0.5 if m == "m0" else 0.2)
+             for m in profs}
+    seq = [m for m in profs
+           for _ in range(max(1, int(10 * rates[m] / sum(rates.values()))))]
+    n = max(8, int(sum(rates.values())))
+    for i in range(n):
+        loop.monitor.observe(seq[i % len(seq)], i / n)
+
+    # the drift trips but the gate rejects it as marginal -> cooldown opens
+    assert loop.maybe_replan(1.0) is None
+    assert [d.reason for d in policy.decisions] == ["marginal"]
+    assert policy._cooldown_until > 1.0
+    cooldown_until = policy._cooldown_until
+
+    # node loss INSIDE that window: the mandatory path may not wait it out
+    plan2 = loop.force_replan(1.1, reason="node_loss")
+    assert plan2 is not None and dp.tel.plan_swaps == 1
+    last = policy.decisions[-1]
+    assert last.accepted and last.reason == "mandatory:node_loss"
+    assert dp.tel.replan_decisions[-1]["reason"] == "mandatory:node_loss"
+    # the mandatory record leaves the gate's hysteresis state alone
+    assert policy._cooldown_until == cooldown_until
+
+    # a DRIFT considered later in the same window must still be rejected —
+    # the mandatory (accepted) record in between must not be replayed as
+    # the window's cached decision
+    d = policy.consider(1.3, rates, dp.rt.plan, store)
+    assert not d.accepted and d.reason == "cooldown"
+
+
 # ---------------------------------------------------------------------------
 # Per-class capacity pools vs the scalar exchange rate (regression)
 # ---------------------------------------------------------------------------
