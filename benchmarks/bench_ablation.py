@@ -22,7 +22,8 @@ def main(quick=False):
     out = []
     xfer_stats = {}
     for mode, reactive in (("reservation", False), ("reactive", True)):
-        def attain(lf: float) -> float:
+        def attain(lf: float, mode: str = mode,
+                   reactive: bool = reactive) -> float:
             trace = poisson_trace(thr * lf, HORIZON_S, profiles[arch].slo_s,
                                   arch, seed=0)
             sim = run_simulation(build_runtime(plan, profiles), trace,

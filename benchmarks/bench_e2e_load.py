@@ -104,7 +104,7 @@ def run(group="G1", cluster_name="HC1-L", bursty=False, quick=False):
     rows = []
     for name, plan in plans.items():
 
-        def attain(lf: float) -> float:
+        def attain(lf: float, plan=plan) -> float:
             rates = {a: ref_thr[a] * lf for a in archs}
             rep, _ = _serve(cfg, store, plan, profiles, rates, bursty)
             return 1.0 if rep is None else rep.attainment

@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.common import chunked_attention, decode_attention, rms_norm
 from repro.kernels.boundary_quant import ref as bq_ref

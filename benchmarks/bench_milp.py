@@ -32,9 +32,9 @@ from repro.core import plan_cluster, solve_milp
 from repro.core.types import ClusterSpec
 
 if __package__ in (None, ""):
-    from benchmarks.common import make_setup, profile_for
+    from benchmarks.common import profile_for
 else:
-    from .common import make_setup, profile_for
+    from .common import profile_for
 
 ARCH = "stablelm-3b"
 
@@ -72,7 +72,7 @@ def solver_scale(quick=False):
     comes from.
     """
     from repro.configs import ARCH_IDS
-    from repro.controlplane import Objective, Planner, solve_milp_multi
+    from repro.core import Objective, Planner, solve_milp_multi
 
     time_limit = 10.0 if quick else 30.0
     warm_gap = 1e-2 if quick else 5e-3

@@ -24,7 +24,7 @@ def load(path):
 def table(single="dryrun_single_pod.jsonl"):
     recs = load(os.path.join(RESULTS, single))
     rows = []
-    for (arch, shape, mesh), r in sorted(recs.items()):
+    for (arch, shape, _mesh), r in sorted(recs.items()):
         if r["status"] == "skip":
             rows.append((arch, shape, "SKIP", r.get("reason", "")))
             continue

@@ -74,7 +74,7 @@ def main():
         # Multi-model exactness: the literal MILP restricted to the
         # enumerator's feasible set (whole chips) must agree with template
         # enumeration to float precision on the min-normalized objective.
-        from repro.controlplane import plan_cluster, solve_milp_multi
+        from repro.core import plan_cluster, solve_milp_multi
 
         second = "qwen2-1.5b" if args.arch != "qwen2-1.5b" else "stablelm-3b"
         weights = {args.arch: 1.0, second: 2.0}

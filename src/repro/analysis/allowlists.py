@@ -1,0 +1,117 @@
+"""Sanctioned exceptions to the invariant rules — each with a reason.
+
+These are *allowlists*, not a baseline: the baseline (`baseline.json`)
+grandfathers violations that should eventually be fixed; an allowlist entry
+declares a seam that is correct by design and will stay.  Rules consult
+these tables; adding an entry is a reviewed code change, which is the
+point.
+
+Key shapes:
+
+* ``WALL_CLOCK_ALLOWED``: ``(repo-relative path, dotted scope)`` — the
+  scope and everything nested under it may read the wall clock.
+* ``THREAD_SHARED_ALLOWED``: ``(repo-relative path, "Class.attr")`` — the
+  attribute is mutated both from a Thread target and on the serve path,
+  with an explicit handoff protocol making that safe.
+* ``FACADE_DEEP_ALLOWED``: ``(repo-relative path, dotted module)`` — this
+  client may deep-import that module.
+"""
+
+from __future__ import annotations
+
+# ----------------------------------------------------------- DET001 seams
+# Wall-clock reads feed *measurement*, never decisions: solver/compile/swap
+# walls are reported in artifacts (solver_wall_s, warm_wall_s) and the
+# dispatcher's measured-wall feedback loop calibrates latency tables from
+# real execution.  Scheduling and planning themselves run on the virtual
+# clock.
+WALL_CLOCK_ALLOWED: dict[tuple[str, str], str] = {
+    ("src/repro/controlplane/milp.py", "solve_milp_multi"):
+        "reports solver_wall_s on the returned plan (measurement only)",
+    ("src/repro/controlplane/baselines.py", "plan_dart_r"):
+        "reports solver_wall_s on the returned plan (measurement only)",
+    ("src/repro/controlplane/templates.py", "plan_cluster"):
+        "reports solver_wall_s on the returned plan (measurement only)",
+    ("src/repro/controlplane/planner.py", "Planner.plan"):
+        "records last_wall_s for replan-cost accounting (measurement only)",
+    ("src/repro/api/session.py", "_PreparedSwap.__init__.work"):
+        "background-compile wall (warm_wall_s) for swap benchmarking",
+    ("src/repro/api/session.py", "Session.swap"):
+        "compile/swap transient walls reported in SwapRecord",
+    ("src/repro/dataplane/plane.py", "calibrate_runtime"):
+        "measured-wall calibration seam: real kernel walls feed the "
+        "latency table before planning, never mid-decision",
+    ("src/repro/dataplane/dispatcher.py", "PoolDispatcher.submit_chain"):
+        "measured-wall feedback seam (DESIGN.md section 5): wall stamps "
+        "on real execution, decisions stay on the virtual clock",
+    ("src/repro/dataplane/dispatcher.py", "PoolDispatcher._measure_through"):
+        "measured-wall feedback seam: ready-time stamps for completed "
+        "real batches",
+}
+
+# ----------------------------------------------------------- THR001 seams
+# (class-attribute handoffs between prepare_swap's background compile
+# thread and the serve path; every entry names its synchronization.)
+THREAD_SHARED_ALLOWED: dict[tuple[str, str], str] = {
+    ("src/repro/api/session.py", "Session._exec_cache"):
+        "all writers hold Session._compile_lock (background warm compile "
+        "and serve-path _executors_for serialize on it)",
+    ("src/repro/api/session.py", "Session._params"):
+        "idempotent build-once cache; writes serialized by _compile_lock "
+        "via _warm_executors/_executors_for",
+    ("src/repro/api/session.py", "Session._lbms"):
+        "idempotent build-once cache; writes serialized by _compile_lock "
+        "via _warm_executors/_executors_for",
+    ("src/repro/api/session.py", "_PreparedSwap.new_ranges"):
+        "written only by the worker thread; __init__ sets the pre-thread "
+        "default and every read happens after Thread.join() in wait() "
+        "(join is a happens-before edge)",
+    ("src/repro/api/session.py", "_PreparedSwap.reused"):
+        "worker-thread result slot; read only after Thread.join() in "
+        "wait()",
+    ("src/repro/api/session.py", "_PreparedSwap.warm_wall_s"):
+        "worker-thread result slot; read only after Thread.join() in "
+        "wait()",
+    ("src/repro/api/session.py", "_PreparedSwap.error"):
+        "worker-thread result slot; re-raised after Thread.join() in "
+        "wait()",
+}
+
+# ----------------------------------------------------------- FAC rules
+# Import roots examples/ and benchmarks/ may use: the public facade, the
+# core algorithm library, and the declarative data/stream/model surfaces.
+FACADE_ALLOWED_ROOTS: tuple[str, ...] = (
+    "repro.api", "repro.core", "repro.configs", "repro.data",
+    "repro.stream", "repro.models", "repro.kernels", "repro.training",
+)
+
+# Internal subsystems that must be reached through repro.api / repro.core.
+FACADE_FORBIDDEN_ROOTS: tuple[str, ...] = (
+    "repro.dataplane", "repro.controlplane", "repro.obs", "repro.serving",
+    "repro.faults", "repro.launch",
+)
+
+FACADE_DEEP_ALLOWED: dict[tuple[str, str], str] = {
+    ("benchmarks/bench_sched.py", "repro.core._reference"):
+        "the benchmark's whole purpose is decision-equivalence against "
+        "the frozen pre-PR4 reference implementation",
+}
+
+# Moved modules that must keep a deprecation shim: old module -> the new
+# home it must re-export (FAC003 verifies the shim file still imports the
+# new module and forwards via module __getattr__ or explicit re-export).
+MOVED_MODULES: dict[str, str] = {
+    "src/repro/core/milp.py": "repro.controlplane.milp",
+    "src/repro/core/enumerate.py": "repro.controlplane.templates",
+    "src/repro/core/baselines.py": "repro.controlplane.baselines",
+    # FailureInjector moved to repro.faults; training.elastic re-exports it
+    "src/repro/training/elastic.py": "repro.faults",
+}
+
+# ----------------------------------------------------------- RTP rules
+# Fields deliberately excluded from dict round-trips, with why.
+ROUNDTRIP_EXCLUDED: dict[tuple[str, str], str] = {
+    ("src/repro/api/config.py", "ServeConfig.token_fn"):
+        "a callable can't serialize; from_dict re-attaches it via its "
+        "token_fn parameter",
+}

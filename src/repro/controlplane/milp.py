@@ -355,7 +355,7 @@ def solve_milp_multi(
     # whole chips when whole_chips=True)
     for cname, count in cluster.counts.items():
         coef = {}
-        for (mi, l, d), keys in keys_ld.items():
+        for (_mi, l, d), keys in keys_ld.items():
             if shapes[l].classes[d] == cname:
                 for k in keys:
                     coef[g_idx[k]] = 1.0 if whole_chips else 1.0 / k[3]
@@ -399,7 +399,7 @@ def solve_milp_multi(
     integrality = np.zeros(nvar)
     lb = np.zeros(nvar)
     ub = np.full(nvar, np.inf)
-    for k, var in p_idx.items():
+    for var in p_idx.values():
         integrality[var] = 1
         ub[var] = 1.0
     for k, var in g_idx.items():

@@ -36,7 +36,7 @@ import numpy as np
 from scipy.optimize import linprog
 
 from repro.core.plan import ClusterPlan
-from repro.core.types import ClusterSpec, ModelProfile
+from repro.core.types import ClusterSpec
 
 from .planner import Objective, Planner
 from .profiles import ProfileStore
@@ -545,7 +545,7 @@ class ReplanLoop:
         """DataPlane loss hook: shrink the planning inventory by the lost
         chips and force a mandatory replan before the victims re-admit."""
         counts = dict(self.cluster.counts)
-        for cname in {c for c, _ in lost}:
+        for cname in sorted({c for c, _ in lost}):
             n_lost = sum(1 for c, cid in lost
                          if c == cname and cid < counts.get(cname, 0))
             if n_lost:

@@ -35,8 +35,11 @@ _LAZY = {
     "plan_cluster": ("repro.controlplane.templates", "plan_cluster"),
     "PlanningResult": ("repro.controlplane.templates", "PlanningResult"),
     "solve_milp": ("repro.controlplane.milp", "solve_milp"),
+    "solve_milp_multi": ("repro.controlplane.milp", "solve_milp_multi"),
     "plan_np": ("repro.controlplane.baselines", "plan_np"),
     "plan_dart_r": ("repro.controlplane.baselines", "plan_dart_r"),
+    "Planner": ("repro.controlplane.planner", "Planner"),
+    "Objective": ("repro.controlplane.planner", "Objective"),
     "baselines": ("repro.core.baselines", None),
     "enumerate": ("repro.core.enumerate", None),
     "milp": ("repro.core.milp", None),

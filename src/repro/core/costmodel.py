@@ -25,7 +25,6 @@ ops:byte ratio, so different blocks prefer different classes (paper Fig. 3).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Sequence
 
 from .types import AcceleratorClass, Block, ClusterSpec, LayerCost, ModelProfile

@@ -276,7 +276,8 @@ class StageRuntime:
     def _pool_info(self) -> tuple[frozenset, float]:
         ids = self._node_ids
         if ids is None:
-            ids = self._node_ids = frozenset(id(v.node) for v in self.vdevs)
+            ids = self._node_ids = frozenset(
+                v.node.node_id for v in self.vdevs)
             self._bw_max = max((v.node.nic_bw for v in self.vdevs), default=0.0)
         return ids, self._bw_max
 
@@ -351,7 +352,8 @@ def validate_bisection(pipeline: PipelineRuntime) -> bool:
     if monotone:
         for si, stage in enumerate(pipeline.stages):
             if si > 0 and stage.in_bytes_per_req > 0:
-                if len({id(v.node) for v in pipeline.stages[si - 1].vdevs}) > 1:
+                if len({v.node.node_id
+                        for v in pipeline.stages[si - 1].vdevs}) > 1:
                     single_upstream = False
                     break
     if not monotone:
@@ -442,12 +444,12 @@ def probe_upper_envelope(pipeline: PipelineRuntime, bs: int, now: float) -> floa
             seen: set[int] = set()
             for up in prev.vdevs:
                 up_node = up.node
-                if id(up_node) in seen:
+                if up_node.node_id in seen:
                     continue
-                seen.add(id(up_node))
+                seen.add(up_node.node_id)
                 up_bw = up_node.nic_bw
                 ul = up_node.uplink
-                if id(up_node) in node_ids:
+                if up_node.node_id in node_ids:
                     threshold = t_g + l_i
                 else:
                     bwm = up_bw if up_bw < bw_max else bw_max
@@ -505,7 +507,7 @@ def probe(pipeline: PipelineRuntime, bs: int, now: float) -> ProbeResult:
             last_bw = last_node.nic_bw
             ul = last_node.uplink
             node_ids, bw_max = stage._pool_info()
-            if id(last_node) in node_ids:
+            if last_node.node_id in node_ids:
                 # some member is co-located: zero-wait bound skips the xfer
                 threshold = t_g + l_i
             else:

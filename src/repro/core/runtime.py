@@ -12,7 +12,7 @@ import math
 from dataclasses import dataclass, field
 
 from . import costmodel
-from .plan import ClusterPlan, PipelinePlan
+from .plan import ClusterPlan
 from .reservation import (
     NodeRes,
     PipelineRuntime,

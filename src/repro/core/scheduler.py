@@ -25,7 +25,7 @@ tests/test_sched_equivalence.py.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .reservation import (
     INF,

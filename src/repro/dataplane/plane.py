@@ -760,11 +760,11 @@ class DataPlane:
                 self._epoch_inflight.get(job.epoch, 1) - 1)
             epochs.add(job.epoch)
             victims.extend(job.requests)
-        for epoch in epochs:
+        for epoch in sorted(epochs):
             self._maybe_gc_epoch(epoch)
         # the dead chips' physical identity must not throttle whatever the
         # replanned epoch maps onto their ids (tail-stable renumbering)
-        for key in lost:
+        for key in sorted(lost):
             self._phys_chip.pop(key, None)
             self._slowdowns.pop(key, None)
         if accel_class is not None and host_id is not None:

@@ -26,6 +26,7 @@ from __future__ import annotations
 import bisect
 import random
 from dataclasses import dataclass, fields
+from typing import Any
 
 FAULT_KINDS = ("node_join", "node_drain", "node_loss", "chip_slowdown",
                "exec_fault")
@@ -215,7 +216,7 @@ class FaultInjector:
         self.injected: list[FaultEvent] = []
         self._rng = random.Random(seed)
         self._forced_exec_faults = 0
-        self._plane = None
+        self._plane: Any = None  # a live DataPlane after attach()
 
     @classmethod
     def from_config(cls, cfg: FaultConfig, *, on_resize=None

@@ -9,7 +9,6 @@ bandwidth-bound Pallas kernels.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import ARCH_IDS
-from repro.core import costmodel as cm
 from repro.core import plan_cluster, plan_dart_r, plan_np
 from repro.core.runtime import build_runtime
 from repro.core.simulator import run_simulation

@@ -16,7 +16,6 @@ from .common import (
     ModelConfig,
     ParamDef,
     ShardingRules,
-    apply_rope,
     attn_chunks,
     chunked_attention,
     decode_attention,

@@ -9,7 +9,7 @@ the PPipe control plane consumes (the TensorRT-profiling stand-in).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ TPU hot path and are validated against it in tests.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -14,6 +14,7 @@ pre-observability plane (tests/test_obs.py proves it bit-for-bit).
 from .config import ObsConfig  # noqa: F401
 from .journal import DecisionJournal  # noqa: F401
 from .observer import Observer  # noqa: F401
+from .schema import SCHEMA, EventSchema  # noqa: F401
 from .spans import perfetto_trace, request_trees  # noqa: F401
 from .windows import WindowedMetrics  # noqa: F401
 
@@ -22,6 +23,8 @@ __all__ = [
     "Observer",
     "DecisionJournal",
     "WindowedMetrics",
+    "EventSchema",
+    "SCHEMA",
     "perfetto_trace",
     "request_trees",
 ]

@@ -3,47 +3,14 @@
 Everything that used to be scattered — `Telemetry.replan_decisions`,
 `swap_log`, the ad-hoc `DataPlane.exec_log` tuples, `DispatchRecord`s — lands
 here as flat dicts with a shared envelope: ``{"t_s": <virtual seconds>,
-"kind": <dotted event name>, ...payload}``.  Event kinds:
+"kind": <dotted event name>, ...payload}``.
 
-==================  =========================================================
-kind                payload (beyond t_s)
-==================  =========================================================
-req.arrive          req_id, model, deadline_s
-req.drop            req_id, cause (admission_reject | backpressure_reject |
-                    overflow_shed | expired | scheduler | exec_failure |
-                    node_loss)
-req.complete        req_id, batch_id, ok
-batch.dispatch      batch_id, epoch, pipeline_id, batch_size, req_ids,
-                    queue_depth, planned_finish_s
-exec.stage          batch_id, epoch, pipeline_id, stage_idx, accel_class,
-                    chip_id, vdev_id, start_s, dur_s, batch_size
-exec.xfer           batch_id, epoch, ul [class, host], dl [class, host],
-                    start_s, dur_s
-batch.wall          batch_id, epoch, pipeline_id, wall_s, stage_wall_s
-                    (real execution only; t_s is the *wall* submit time)
-plan.swap           epoch_from, epoch_to, reason, transient_s, carried
-drift.estimate      rate_rel, mix_tv, tripped
-replan.decision     the ReplanPolicy decision dict (accepted, reason,
-                    benefit/cost inputs)
-replan.failure      error
-replan.success      solver_wall_s, throughput_rps
-admit.shed          model, queue_depth, shed_total,
-                    backpressure_rejected_total — a model queue crossed its
-                    high watermark and entered backpressure
-admit.resume        model, queue_depth — the queue drained to the resume
-                    watermark; backpressure released
-fault.inject        fault_kind (node_join | node_drain | node_loss |
-                    chip_slowdown | exec_fault) + the FaultEvent payload
-                    (accel_class, host_id, chip_id, factor, count)
-pool.drain          accel_class, host_id, inflight_failed, readmitted,
-                    dropped — a host's pools were retired abruptly
-resize.start        old_counts, new_counts, reason — Session.resize began
-resize.complete     new_counts, carried, solver_wall_s — the resized plan
-                    is installed; `carried` queued requests were re-admitted
-retry.attempt       batch_id, pipeline_id, n_requests, readmitted — a
-                    transient exec failure triggered a hedged retry
-retry.exhausted     req_id, attempts — the request's retry budget ran out
-==================  =========================================================
+The event kinds and their required payload fields are declared once, in
+`repro.obs.schema` (`SCHEMA`: kind → :class:`~repro.obs.schema.EventSchema`).
+Emitters reference the schema's kind constants and consumers are
+cross-checked against the same table by the static invariant linter
+(`repro.analysis`, JRN rules) — see that module's docstring for the full
+contract.
 
 Values are strict-JSON by construction: tuples become lists at record time
 and `to_json()` runs with ``allow_nan=False``, so a NaN/inf sneaking into an
@@ -53,6 +20,7 @@ event fails loudly here rather than in a downstream consumer.
 from __future__ import annotations
 
 import json
+from typing import Callable
 
 SCHEMA_VERSION = 1
 
@@ -80,7 +48,8 @@ class DecisionJournal:
 
     def __init__(self) -> None:
         self._events: list[dict] = []
-        self._flusher = None  # set by Observer; must append to _events
+        # set by Observer; must append to _events
+        self._flusher: Callable[[], None] | None = None
 
     @property
     def events(self) -> list[dict]:

@@ -32,6 +32,12 @@ from __future__ import annotations
 
 from .config import ObsConfig
 from .journal import DecisionJournal, _jsonable
+from .schema import (ADMIT_RESUME, ADMIT_SHED, BATCH_DISPATCH, BATCH_WALL,
+                     DRIFT_ESTIMATE, EXEC_STAGE, EXEC_XFER, FAULT_INJECT,
+                     PLAN_SWAP, POOL_DRAIN, REPLAN_DECISION, REPLAN_FAILURE,
+                     REPLAN_SUCCESS, REQ_ARRIVE, REQ_COMPLETE, REQ_DROP,
+                     RESIZE_COMPLETE, RESIZE_START, RETRY_ATTEMPT,
+                     RETRY_EXHAUSTED)
 from .windows import WindowedMetrics
 
 _HASH = 2654435761  # Knuth multiplicative hash (2^32 / phi)
@@ -109,27 +115,27 @@ class Observer:
     # (infrequent: build the journal dict now, buffer it for ordering)
     def on_swap(self, t: float, epoch_from: int, epoch_to: int, reason: str,
                 transient_s: float, carried: int) -> None:
-        self.push({"t_s": t, "kind": "plan.swap", "epoch_from": epoch_from,
+        self.push({"t_s": t, "kind": PLAN_SWAP, "epoch_from": epoch_from,
                    "epoch_to": epoch_to, "reason": reason,
                    "transient_s": transient_s, "carried": carried})
 
     def on_drift(self, t: float, rate_rel: float, mix_tv: float,
                  tripped: bool) -> None:
-        self.push({"t_s": t, "kind": "drift.estimate", "rate_rel": rate_rel,
+        self.push({"t_s": t, "kind": DRIFT_ESTIMATE, "rate_rel": rate_rel,
                    "mix_tv": mix_tv, "tripped": bool(tripped)})
 
     def on_replan_decision(self, t: float, decision: dict) -> None:
-        ev = {"t_s": t, "kind": "replan.decision"}
+        ev = {"t_s": t, "kind": REPLAN_DECISION}
         for k, v in decision.items():
             ev[k] = _jsonable(v)
         self.push(ev)
 
     def on_replan_failure(self, t: float, error: str) -> None:
-        self.push({"t_s": t, "kind": "replan.failure", "error": error})
+        self.push({"t_s": t, "kind": REPLAN_FAILURE, "error": error})
 
     def on_replan_success(self, t: float, solver_wall_s: float,
                           throughput_rps: float) -> None:
-        self.push({"t_s": t, "kind": "replan.success",
+        self.push({"t_s": t, "kind": REPLAN_SUCCESS,
                    "solver_wall_s": solver_wall_s,
                    "throughput_rps": throughput_rps})
 
@@ -138,20 +144,20 @@ class Observer:
         """A model's queue entered backpressure (depth crossed the high
         watermark): doomed queued work is being shed / arrivals door-rejected
         until depth drains to the resume watermark."""
-        self.push({"t_s": t, "kind": "admit.shed", "model": model,
+        self.push({"t_s": t, "kind": ADMIT_SHED, "model": model,
                    "queue_depth": depth, "shed_total": shed_total,
                    "backpressure_rejected_total": rejected_total})
 
     def on_admit_resume(self, t: float, model: str, depth: int) -> None:
         """The model's queue drained to the resume watermark: backpressure
         released, admission back to normal."""
-        self.push({"t_s": t, "kind": "admit.resume", "model": model,
+        self.push({"t_s": t, "kind": ADMIT_RESUME, "model": model,
                    "queue_depth": depth})
 
     # ------------------------------------------- elastic / fault-path hooks
     def on_fault(self, t: float, fault_kind: str, event: dict) -> None:
         """A scheduled fault event was delivered (repro.faults)."""
-        ev = {"t_s": t, "kind": "fault.inject", "fault_kind": fault_kind}
+        ev = {"t_s": t, "kind": FAULT_INJECT, "fault_kind": fault_kind}
         for k, v in event.items():
             if k not in ("t_s", "kind"):
                 ev[k] = _jsonable(v)
@@ -162,20 +168,20 @@ class Observer:
                       dropped: int) -> None:
         """A host's pools were retired abruptly (node loss): how many
         in-flight batches were failed, and how their requests resolved."""
-        self.push({"t_s": t, "kind": "pool.drain",
+        self.push({"t_s": t, "kind": POOL_DRAIN,
                    "accel_class": accel_class, "host_id": host_id,
                    "inflight_failed": inflight_failed,
                    "readmitted": readmitted, "dropped": dropped})
 
     def on_resize_start(self, t: float, old_counts: dict, new_counts: dict,
                         reason: str) -> None:
-        self.push({"t_s": t, "kind": "resize.start",
+        self.push({"t_s": t, "kind": RESIZE_START,
                    "old_counts": dict(old_counts),
                    "new_counts": dict(new_counts), "reason": reason})
 
     def on_resize_complete(self, t: float, new_counts: dict,
                            carried: int, solver_wall_s: float) -> None:
-        self.push({"t_s": t, "kind": "resize.complete",
+        self.push({"t_s": t, "kind": RESIZE_COMPLETE,
                    "new_counts": dict(new_counts), "carried": carried,
                    "solver_wall_s": solver_wall_s})
 
@@ -185,14 +191,14 @@ class Observer:
         cancelled and `readmitted` of its requests re-entered the EDF queue
         (hedged — the scheduler re-probes every pool, not just the failed
         one)."""
-        self.push({"t_s": t, "kind": "retry.attempt", "batch_id": batch_id,
+        self.push({"t_s": t, "kind": RETRY_ATTEMPT, "batch_id": batch_id,
                    "pipeline_id": pipeline_id, "n_requests": n_requests,
                    "readmitted": readmitted})
 
     def on_retry_exhausted(self, t: float, req_id: int,
                            attempts: int) -> None:
         """A request used up its retry budget; it drops as exec_failure."""
-        self.push({"t_s": t, "kind": "retry.exhausted", "req_id": req_id,
+        self.push({"t_s": t, "kind": RETRY_EXHAUSTED, "req_id": req_id,
                    "attempts": attempts})
 
     # ------------------------------------------------------ materialization
@@ -219,7 +225,7 @@ class Observer:
                  chip_id, vdev_id, start, dur, batch_size) = rec
                 w.observe_busy(accel_class, start, dur)
                 if trace:
-                    append({"t_s": start, "kind": "exec.stage",
+                    append({"t_s": start, "kind": EXEC_STAGE,
                             "batch_id": batch_id, "epoch": epoch,
                             "pipeline_id": pipeline_id,
                             "stage_idx": stage_idx,
@@ -231,7 +237,7 @@ class Observer:
                 w.observe_arrival(t)
                 if trace and (sample_all or (not sample_none and (
                         req.req_id * _HASH) & 0xFFFFFFFF < thr)):
-                    append({"t_s": t, "kind": "req.arrive",
+                    append({"t_s": t, "kind": REQ_ARRIVE,
                             "req_id": req.req_id, "model": req.model_name,
                             "deadline_s": req.deadline_s})
             elif op == OP_COMPLETE:
@@ -242,7 +248,7 @@ class Observer:
                 w.observe_complete(t, ok)
                 if trace and (sample_all or (not sample_none and (
                         req.req_id * _HASH) & 0xFFFFFFFF < thr)):
-                    append({"t_s": t, "kind": "req.complete",
+                    append({"t_s": t, "kind": REQ_COMPLETE,
                             "req_id": req.req_id, "batch_id": batch_id,
                             "ok": bool(ok)})
             elif op == OP_DISPATCH:
@@ -252,7 +258,7 @@ class Observer:
                 w.observe_dispatch(t, len(requests), depth, inflight,
                                    [t - r.arrival_s for r in requests])
                 if trace:
-                    append({"t_s": t, "kind": "batch.dispatch",
+                    append({"t_s": t, "kind": BATCH_DISPATCH,
                             "batch_id": batch_id, "epoch": epoch,
                             "pipeline_id": pipeline_id,
                             "batch_size": len(requests),
@@ -262,7 +268,7 @@ class Observer:
             elif op == OP_XFER:
                 if trace:
                     _, batch_id, epoch, ul_key, dl_key, start, dur = rec
-                    append({"t_s": start, "kind": "exec.xfer",
+                    append({"t_s": start, "kind": EXEC_XFER,
                             "batch_id": batch_id, "epoch": epoch,
                             "ul": list(ul_key), "dl": list(dl_key),
                             "start_s": start, "dur_s": dur})
@@ -271,11 +277,11 @@ class Observer:
                 w.observe_drop(t, cause)
                 if trace and (sample_all or (not sample_none and (
                         req.req_id * _HASH) & 0xFFFFFFFF < thr)):
-                    append({"t_s": t, "kind": "req.drop",
+                    append({"t_s": t, "kind": REQ_DROP,
                             "req_id": req.req_id, "cause": cause})
             else:  # OP_BATCH_WALL
                 done = rec[1]
-                append({"t_s": done.submit_wall, "kind": "batch.wall",
+                append({"t_s": done.submit_wall, "kind": BATCH_WALL,
                         "batch_id": done.job_id, "epoch": done.epoch,
                         "pipeline_id": done.pipeline_id,
                         "wall_s": done.total_wall_s,

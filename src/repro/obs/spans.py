@@ -63,9 +63,10 @@ def request_trees(events: list[dict]) -> dict[int, dict]:
     trees: dict[int, dict] = {}
     for rid, ev in arrive.items():
         t0 = ev["t_s"]
-        node = {"req_id": rid, "model": ev["model"], "start_s": t0,
-                "end_s": None, "status": "pending", "batch_id": None,
-                "children": []}
+        children: list[dict] = []
+        node: dict = {"req_id": rid, "model": ev["model"], "start_s": t0,
+                      "end_s": None, "status": "pending", "batch_id": None,
+                      "children": children}
         if rid in complete:
             node["end_s"] = complete[rid]["t_s"]
             node["status"] = "served"
@@ -76,17 +77,17 @@ def request_trees(events: list[dict]) -> dict[int, dict]:
         if bid is not None and rid in complete:
             node["batch_id"] = bid
             d = batches[bid]
-            node["children"].append({
+            children.append({
                 "name": "queue", "start_s": t0, "end_s": d["t_s"],
                 "resource": ["queue", d["pipeline_id"]]})
             for s in sorted(stages.get(bid, ()), key=lambda e: e["stage_idx"]):
-                node["children"].append({
+                children.append({
                     "name": f"stage{s['stage_idx']}",
                     "start_s": s["start_s"],
                     "end_s": s["start_s"] + s["dur_s"],
                     "resource": ["chip", s["accel_class"], s["chip_id"]]})
             for x in sorted(xfers.get(bid, ()), key=lambda e: e["start_s"]):
-                node["children"].append({
+                children.append({
                     "name": "xfer",
                     "start_s": x["start_s"],
                     "end_s": x["start_s"] + x["dur_s"],

@@ -113,19 +113,22 @@ class WindowedMetrics:
     # -------------------------------------------------------------- totals
     def totals(self) -> dict:
         """End-of-run sums over all windows (the cross-check surface)."""
-        out = {"arrivals": 0, "completions": 0, "ok": 0, "dispatches": 0,
-               "batch_sum": 0, "drops": {}, "busy_s": {}}
+        arrivals = completions = ok = dispatches = batch_sum = 0
+        drops: dict[str, int] = {}
+        busy_s: dict[str, float] = {}
         for w in self._w.values():
-            out["arrivals"] += w.arrivals
-            out["completions"] += w.completions
-            out["ok"] += w.ok
-            out["dispatches"] += w.dispatches
-            out["batch_sum"] += w.batch_sum
+            arrivals += w.arrivals
+            completions += w.completions
+            ok += w.ok
+            dispatches += w.dispatches
+            batch_sum += w.batch_sum
             for c, n in w.drops.items():
-                out["drops"][c] = out["drops"].get(c, 0) + n
+                drops[c] = drops.get(c, 0) + n
             for c, b in w.busy.items():
-                out["busy_s"][c] = out["busy_s"].get(c, 0.0) + b
-        return out
+                busy_s[c] = busy_s.get(c, 0.0) + b
+        return {"arrivals": arrivals, "completions": completions, "ok": ok,
+                "dispatches": dispatches, "batch_sum": batch_sum,
+                "drops": drops, "busy_s": busy_s}
 
     # -------------------------------------------------------------- series
     def series(self, horizon_s: float = 0.0,
@@ -150,7 +153,7 @@ class WindowedMetrics:
         wins = [self._w.get(i, empty) for i in range(n)]
         classes = sorted({c for w in wins for c in w.busy})
         drop_causes = sorted({c for w in wins for c in w.drops})
-        out = {
+        out: dict = {
             "window_s": ws,
             "n_windows": n,
             "t_s": [round(i * ws, 9) for i in range(n)],

@@ -20,11 +20,9 @@ distributed/collectives.py that shrinks the straggler-sensitive reduction.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Callable
 
-import jax
 import numpy as np
 
 # the deterministic-schedule core lives in repro.faults so serving and

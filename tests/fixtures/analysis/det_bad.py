@@ -1,0 +1,21 @@
+"""Seeded DET violations (tests/test_analysis.py stages this file at
+src/repro/core/det_bad.py in a scratch tree — decision scope)."""
+
+import random
+import time
+
+import numpy as np
+
+
+def decide(requests):
+    stamp = time.time()                    # DET001: wall clock
+    jitter = random.random()               # DET002: global RNG
+    rng = np.random.default_rng()          # DET002: unseeded generator
+    keys = [id(r) for r in requests]       # DET003: id()-keyed identity
+    pools = {"tpu-hi", "tpu-lo"}
+    order = []
+    for p in pools:                        # DET004: set iteration order
+        order.append(p)
+    # order-insensitive reducers stay legal:
+    total = sum(len(p) for p in pools)
+    return stamp, jitter, rng, keys, order, total

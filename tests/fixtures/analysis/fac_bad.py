@@ -1,0 +1,9 @@
+"""Seeded FAC violations (staged at examples/fac_bad.py): deep + private
+imports bypassing the facade."""
+
+from repro.dataplane import plane          # noqa: F401  FAC001
+from repro.core import _reference          # noqa: F401  FAC002
+
+
+def main():
+    return plane, _reference

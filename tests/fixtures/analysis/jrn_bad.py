@@ -1,0 +1,27 @@
+"""Seeded JRN violations (staged at src/repro/obs/jrn_bad.py): a drifted
+emit site plus mismatched consumers."""
+
+from repro.obs.schema import DRIFT_ESTIMATE, PLAN_SWAP
+
+
+def emit(push, t):
+    # JRN002: plan.swap payload is missing the declared "carried" field
+    push({"t_s": t, "kind": PLAN_SWAP, "epoch_from": 0, "epoch_to": 1,
+          "reason": "drift", "transient_s": 0.0})
+    # JRN005 (free string) — and JRN002 again (undeclared "tripped_hard")
+    push({"t_s": t, "kind": "drift.estimate", "rate_rel": 1.0,
+          "mix_tv": 0.0, "tripped": False, "tripped_hard": True})
+    # JRN001: not a declared kind
+    push({"t_s": t, "kind": "plan.swapped", "epoch_from": 0})
+
+
+def consume(journal):
+    # JRN003: undeclared kind in a select filter
+    ghosts = journal.select(kind="plan.sawp")
+    rates = []
+    for ev in journal.select(kind="drift.estimate"):
+        rates.append(ev["rate_rel"])  # declared: no violation
+    # JRN004: "queue_len" is not a declared admit.resume field
+    depths = [ev["queue_len"] for ev in journal.events
+              if ev["kind"] == "admit.resume"]
+    return ghosts, rates, depths

@@ -1,0 +1,20 @@
+"""Seeded RTP violations (staged at src/repro/api/rtp_bad.py): a dataclass
+whose dict round-trip silently drops a field on both sides."""
+
+from dataclasses import dataclass
+
+
+@dataclass
+class LeakyConfig:
+    alpha: float = 1.0
+    beta: float = 2.0
+    gamma: float = 3.0
+
+    def to_dict(self) -> dict:
+        # RTP001: "gamma" never serializes
+        return {"alpha": self.alpha, "beta": self.beta}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LeakyConfig":
+        # RTP002: no ** catch-all and "gamma" is never read
+        return cls(alpha=d.pop("alpha", 1.0), beta=d.pop("beta", 2.0))

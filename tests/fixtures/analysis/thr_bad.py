@@ -1,0 +1,20 @@
+"""Seeded THR violation (staged at src/repro/api/thr_bad.py): a Thread
+target and the serve path both mutate the same attribute with no declared
+handoff."""
+
+import threading
+
+
+class Worker:
+    def __init__(self) -> None:
+        self.results: list[int] = []
+        self._thread = threading.Thread(target=self._background)
+        self._thread.start()
+
+    def _background(self) -> None:
+        # THR001: also mutated by serve(), and (Worker, results) is not in
+        # THREAD_SHARED_ALLOWED
+        self.results.append(1)
+
+    def serve(self) -> None:
+        self.results.append(2)

@@ -1,0 +1,267 @@
+"""repro.analysis — the static invariant linter.
+
+Three layers:
+
+* fixture catches — each rule family must flag its seeded violation file
+  (tests/fixtures/analysis/*), staged into a scratch tree at the paths
+  that put it in the right scope (decision package, obs emitter, facade
+  client, ...);
+* mechanics — inline pragmas, baseline matching/staleness, reason-less
+  baseline rejection, the CLI exit codes (a drifted emit site must fail
+  the gate);
+* the repo itself — a self-scan of the real tree must be clean against
+  the checked-in baseline, and the violations fixed when the linter first
+  ran stay fixed (node-identity keying pinned behaviorally).
+"""
+
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run
+from repro.analysis.engine import DEFAULT_PATHS
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+SCHEMA_SRC = REPO / "src" / "repro" / "obs" / "schema.py"
+
+# fixture file -> where it must sit in the scratch tree for its rules to
+# be in scope
+STAGING = {
+    "det_bad.py": "src/repro/core/det_bad.py",
+    "jrn_bad.py": "src/repro/obs/jrn_bad.py",
+    "rtp_bad.py": "src/repro/api/rtp_bad.py",
+    "thr_bad.py": "src/repro/api/thr_bad.py",
+    "fac_bad.py": "examples/fac_bad.py",
+}
+
+
+def stage_tree(tmp_path, names=STAGING):
+    """Copy fixtures (plus the real schema registry) into a repo-shaped
+    scratch tree and return its root."""
+    root = tmp_path / "tree"
+    for name, rel in names.items():
+        dst = root / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(FIXTURES / name, dst)
+    schema_dst = root / "src/repro/obs/schema.py"
+    schema_dst.parent.mkdir(parents=True, exist_ok=True)
+    shutil.copy(SCHEMA_SRC, schema_dst)
+    return root
+
+
+def rules_hit(result):
+    return {v.rule for v in result.violations}
+
+
+# ------------------------------------------------------- fixture catches
+
+def test_determinism_fixture_caught(tmp_path):
+    result = run(stage_tree(tmp_path), DEFAULT_PATHS, baseline_path=None)
+    hits = rules_hit(result)
+    assert {"DET001", "DET002", "DET003", "DET004"} <= hits
+    det = [v for v in result.violations if v.rule.startswith("DET")]
+    assert all(v.path == "src/repro/core/det_bad.py" for v in det)
+    # the order-insensitive reducer (sum over the set) must NOT flag
+    assert sum(v.rule == "DET004" for v in det) == 1
+
+
+def test_unseeded_rng_variants_caught(tmp_path):
+    det = [v for v in run(stage_tree(tmp_path), DEFAULT_PATHS,
+                          baseline_path=None).violations
+           if v.rule == "DET002"]
+    msgs = " ".join(v.message for v in det)
+    assert "random.random" in msgs          # global RNG
+    assert "default_rng" in msgs            # unseeded generator
+
+
+def test_journal_fixture_caught(tmp_path):
+    result = run(stage_tree(tmp_path), DEFAULT_PATHS, baseline_path=None)
+    hits = rules_hit(result)
+    assert {"JRN001", "JRN002", "JRN003", "JRN004", "JRN005"} <= hits
+    # the drifted plan.swap emit (missing "carried") is what JRN002 pins
+    drift = [v for v in result.violations
+             if v.rule == "JRN002" and "carried" in v.message]
+    assert drift and drift[0].path == "src/repro/obs/jrn_bad.py"
+
+
+def test_roundtrip_fixture_caught(tmp_path):
+    result = run(stage_tree(tmp_path), DEFAULT_PATHS, baseline_path=None)
+    rtp = [v for v in result.violations if v.rule.startswith("RTP")]
+    assert {"RTP001", "RTP002"} <= {v.rule for v in rtp}
+    assert all("gamma" in v.message for v in rtp)
+
+
+def test_threads_fixture_caught(tmp_path):
+    result = run(stage_tree(tmp_path), DEFAULT_PATHS, baseline_path=None)
+    thr = [v for v in result.violations if v.rule == "THR001"]
+    assert thr and "Worker.results" in thr[0].message
+
+
+def test_facade_fixture_caught(tmp_path):
+    result = run(stage_tree(tmp_path), DEFAULT_PATHS, baseline_path=None)
+    hits = rules_hit(result)
+    assert {"FAC001", "FAC002"} <= hits
+
+
+def test_moved_module_shim_coverage(tmp_path):
+    # the new homes exist in the scratch tree but the shims are missing /
+    # broken -> FAC003; a tree without the new homes owes nothing
+    root = stage_tree(tmp_path, {})
+    bare = run(root, DEFAULT_PATHS, baseline_path=None)
+    assert not any(v.rule == "FAC003" for v in bare.violations)
+    (root / "src/repro/controlplane").mkdir(parents=True)
+    (root / "src/repro/controlplane/milp.py").write_text("X = 1\n")
+    (root / "src/repro/core").mkdir(parents=True, exist_ok=True)
+    # a shim that forgot to forward (no import of the new home)
+    (root / "src/repro/core/milp.py").write_text(
+        "def __getattr__(name):\n    raise AttributeError(name)\n")
+    result = run(root, DEFAULT_PATHS, baseline_path=None)
+    fac3 = [v for v in result.violations if v.rule == "FAC003"]
+    assert {v.path for v in fac3} == {"src/repro/core/milp.py"}
+
+
+# ------------------------------------------------------------- mechanics
+
+def test_inline_pragma_suppresses(tmp_path):
+    root = stage_tree(tmp_path, {"det_bad.py": "src/repro/core/det_bad.py"})
+    f = root / "src/repro/core/det_bad.py"
+    src = f.read_text()
+    src = src.replace("stamp = time.time()",
+                      "stamp = time.time()  # repro: allow[DET001] test")
+    f.write_text(src)
+    result = run(root, DEFAULT_PATHS, baseline_path=None)
+    assert not any(v.rule == "DET001" for v in result.violations)
+    assert any(v.rule == "DET002" for v in result.violations)  # still hit
+
+
+def test_baseline_grandfathers_and_goes_stale(tmp_path):
+    root = stage_tree(tmp_path, {"det_bad.py": "src/repro/core/det_bad.py"})
+    fresh = run(root, DEFAULT_PATHS, baseline_path=None)
+    det001 = next(v for v in fresh.violations if v.rule == "DET001")
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"entries": [
+        {"key": det001.key, "reason": "grandfathered for the test"},
+        {"key": "DET001:src/repro/core/gone.py:nope:time.time",
+         "reason": "matches nothing -> stale"},
+    ]}))
+    result = run(root, DEFAULT_PATHS, baseline_path=baseline)
+    assert det001.key in {v.key for v in result.baselined}
+    assert det001.key not in {v.key for v in result.violations}
+    assert result.stale_baseline == [
+        "DET001:src/repro/core/gone.py:nope:time.time"]
+
+
+def test_baseline_requires_reason(tmp_path):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"entries": [{"key": "DET001:x:y"}]}))
+    with pytest.raises(ValueError, match="reason"):
+        run(tmp_path, DEFAULT_PATHS, baseline_path=baseline)
+
+
+def test_baseline_key_is_line_insensitive(tmp_path):
+    root = stage_tree(tmp_path, {"det_bad.py": "src/repro/core/det_bad.py"})
+    f = root / "src/repro/core/det_bad.py"
+    before = run(root, DEFAULT_PATHS, baseline_path=None)
+    f.write_text("# a new leading comment shifts every line\n"
+                 + f.read_text())
+    after = run(root, DEFAULT_PATHS, baseline_path=None)
+    assert {v.key for v in before.violations} == \
+        {v.key for v in after.violations}
+    assert {v.line for v in before.violations} != \
+        {v.line for v in after.violations}
+
+
+def test_cli_gate_fails_on_drifted_emit(tmp_path):
+    """Acceptance: a deliberately drifted emit site fails the gate (exit
+    2) and lands in the JSON report; rule breakdown included."""
+    root = stage_tree(tmp_path, {"jrn_bad.py": "src/repro/obs/jrn_bad.py"})
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(root),
+         "--no-baseline", "--report", str(report)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+    data = json.loads(report.read_text())
+    assert not data["ok"]
+    assert data["counts"].get("JRN002", 0) >= 1
+    assert any(v["rule"] == "JRN002" for v in data["violations"])
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    root = tmp_path / "clean"
+    (root / "src/repro/obs").mkdir(parents=True)
+    shutil.copy(SCHEMA_SRC, root / "src/repro/obs/schema.py")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(root),
+         "--no-baseline", "src/repro"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------- the repo itself
+
+def test_self_scan_clean_modulo_baseline():
+    """src/repro + examples + benchmarks + tests pass the analyzer against
+    the checked-in baseline, with no stale baseline entries."""
+    baseline = REPO / "src/repro/analysis/baseline.json"
+    result = run(REPO, DEFAULT_PATHS, baseline_path=baseline)
+    assert result.files_scanned > 100
+    lines = [f"{v.path}:{v.line}: {v.rule} {v.message}"
+             for v in result.violations]
+    assert not lines, "\n".join(lines)
+    assert not result.stale_baseline, result.stale_baseline
+
+
+def test_schema_registry_is_single_source_of_truth():
+    """observer.py carries no free-string event kinds (JRN005 would flag
+    them) and every schema kind has at least one emit site or consumer
+    somewhere in the tree — no dead kinds."""
+    result = run(REPO, ("src/repro/obs",), baseline_path=None)
+    assert not any(v.rule == "JRN005" for v in result.violations)
+
+
+# --------------------------------------- regression pins for fixed findings
+
+def _mini_pipeline():
+    from repro.core.reservation import (NodeRes, PipelineRuntime,
+                                        StageRuntime, VDevRes)
+    nodes = [NodeRes(node_id=i, accel_class="hi", nic_bw=1e9)
+             for i in range(3)]
+    vd1 = [VDevRes(0, nodes[0], 0, "hi", 1)]
+    vd2 = [VDevRes(1 + i, nodes[1 + i], 1 + i, "lo", 1) for i in range(2)]
+    return PipelineRuntime(
+        pipeline_id=0, model_name="m", unified_batch=2,
+        stages=[
+            StageRuntime(vdevs=vd1, latency_by_batch={1: 0.01, 2: 0.015},
+                         in_bytes_per_req=0.0),
+            StageRuntime(vdevs=vd2, latency_by_batch={1: 0.02, 2: 0.03},
+                         in_bytes_per_req=1e6),
+        ],
+    )
+
+
+def test_pool_identity_is_allocation_independent():
+    """Regression pin for the DET003 fix in core/reservation.py: pool/node
+    identity used to be keyed on id(node) — CPython heap addresses — so
+    two identical runtimes (or the same build in two processes) disagreed
+    on the frozenset values backing probe's co-location checks.  Keyed on
+    NodeRes.node_id, two independent builds must agree exactly."""
+    from repro.core.reservation import probe, validate_bisection
+
+    a, b = _mini_pipeline(), _mini_pipeline()
+    ids_a, bw_a = a.stages[1]._pool_info()
+    ids_b, bw_b = b.stages[1]._pool_info()
+    assert ids_a == ids_b == frozenset({1, 2})  # stable node_id keys
+    assert bw_a == bw_b
+    assert validate_bisection(a) == validate_bisection(b)
+    assert a.bisection_mode == b.bisection_mode
+    ra, rb = probe(a, 2, now=0.0), probe(b, 2, now=0.0)
+    assert ra.finish_time == rb.finish_time
+    assert [v.vdev_id for v in ra.path] == [v.vdev_id for v in rb.path]

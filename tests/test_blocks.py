@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st  # seeded sampler without hypothesis
 
-from repro.core import blocks, costmodel as cm
+from repro.core import blocks
 from repro.core.types import TPU_HI, LayerCost
 
 

@@ -8,7 +8,7 @@ import pytest
 from repro.core import blocks, costmodel as cm
 from repro.controlplane import enumerate_templates
 from repro.core import plan_cluster, plan_dart_r, plan_np, solve_milp
-from repro.core.types import ClusterSpec, LayerCost
+from repro.core.types import ClusterSpec
 
 from _hypothesis_compat import given, settings, st
 

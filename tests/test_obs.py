@@ -15,6 +15,7 @@ import pytest
 # runtimes/traces from the scheduler decision-equivalence suite
 import test_epoch_lifecycle as lifecycle
 import test_sched_equivalence as equiv
+from repro.api import LifecycleError
 from repro.core.runtime import build_runtime
 from repro.dataplane import DataPlane
 from repro.obs import (
@@ -421,7 +422,7 @@ def test_session_obs_off_reports_empty_timeseries():
         assert report.obs is None
         assert report.timeseries() == {}
         assert "timeseries" not in report.as_dict()
-        with pytest.raises(Exception):
+        with pytest.raises(LifecycleError):
             report.export_trace("/tmp/nope.json")
 
 

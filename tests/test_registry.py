@@ -1,6 +1,5 @@
 """Assigned configs: exact published dims, shapes, applicability, input specs."""
 
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -92,7 +91,6 @@ def test_decode_specs_have_cache():
     cfg = get_config("qwen3-14b").reduced()
     sp = SHAPES["decode_32k"]
     # reduced config keeps the structure; use a small S to keep eval_shape fast
-    import dataclasses
 
     from repro.configs.registry import ShapeSpec
     small = ShapeSpec("d", 64, 4, "decode")

@@ -54,7 +54,7 @@ def test_timeline_invariants(reservations, t, dur):
     tl = Timeline()
     for start, d in reservations:
         tl.reserve(start, d)
-    for (s1, e1), (s2, e2) in zip(zip(tl.starts, tl.ends),
+    for (s1, e1), (s2, _e2) in zip(zip(tl.starts, tl.ends),
                                   list(zip(tl.starts, tl.ends))[1:]):
         assert e1 < s2 + 1e-9
         assert s1 < e1

@@ -7,7 +7,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.plan import PipelinePlan, StagePlan
 from repro.serving.engine import build_engine, split_stages
-from repro.models.model_zoo import build_model
 
 KEY = jax.random.PRNGKey(3)
 

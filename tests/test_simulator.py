@@ -1,6 +1,5 @@
 """Data-plane end-to-end behaviour on the discrete-event simulator."""
 
-import numpy as np
 import pytest
 
 from repro.core import blocks, costmodel as cm

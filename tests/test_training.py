@@ -8,7 +8,6 @@ import pytest
 
 from repro.configs import get_config
 from repro.data.tokens import TokenPipeline
-from repro.distributed.collectives import CompressionState, compressed_psum_leaf
 from repro.models.model_zoo import build_model
 from repro.training import AdamWConfig, adamw_update, init_opt_state, make_train_step
 from repro.training.optimizer import clip_by_global_norm
@@ -92,8 +91,6 @@ def test_zero_pspec_adds_dp_when_divisible():
 def test_compressed_psum_leaf_error_feedback_converges():
     """int8-compressed mean with error feedback: running average of g_hat
     over repeated rounds converges to the true mean."""
-    import functools
-
     rng = np.random.default_rng(0)
     g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
     true = g  # single "rank" psum over axis of size 1 via vmap-trick:
